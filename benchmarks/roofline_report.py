@@ -1,0 +1,87 @@
+"""Generate the EXPERIMENTS.md §Roofline table from dry-run cell JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--dir results/dryrun]
+Prints a markdown table per mesh + the hillclimb candidate shortlist.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_cells(root: str, variant: str = "baseline"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(root, "*", f"*__{variant}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    if abs(x) < 1e-3 or abs(x) >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.{digits}f}"
+
+
+def bottleneck_fix_hint(r: dict) -> str:
+    dom = r["dominant"]
+    if dom == "memory":
+        return "raise arithmetic intensity: fuse/remat less, bigger per-chip batch, bf16 params"
+    if dom == "collective":
+        return "cut wire bytes: reduce-scatter grads, overlap FSDP gathers, SP for activations"
+    return "already compute-bound: improve MXU utilization (head padding, larger tiles)"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    cells = load_cells(args.dir, args.variant)
+    for mesh in ("single", "multi"):
+        print(f"\n### Mesh: {mesh} {'(16,16)=256 chips' if mesh=='single' else '(2,16,16)=512 chips'}\n")
+        print(
+            "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) | dominant "
+            "| MODEL_FLOPS | useful ratio | roofline frac | next lever |"
+        )
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for c in cells:
+            if c["mesh"] != mesh:
+                continue
+            if c["status"] == "skipped":
+                print(
+                    f"| {c['arch']} | {c['shape']} | — | — | — | — | — | — | — | "
+                    f"SKIPPED: {c['skip_reason'][:60]}... |"
+                )
+                continue
+            if c["status"] != "ok":
+                print(f"| {c['arch']} | {c['shape']} | {c['status']} | | | | | | | |")
+                continue
+            r = c["roofline"]
+            print(
+                f"| {c['arch']} | {c['shape']} | {fmt(r['t_compute_s'])} "
+                f"| {fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} "
+                f"| {r['dominant']} | {fmt(r['model_flops'])} "
+                f"| {fmt(r['useful_flops_ratio'])} | {fmt(r['roofline_fraction'])} "
+                f"| {bottleneck_fix_hint(r)} |"
+            )
+    # hillclimb shortlist
+    ok = [c for c in cells if c["status"] == "ok"]
+    train = [c for c in ok if c["shape"] == "train_4k"]
+    worst = min(train, key=lambda c: c["roofline"]["roofline_fraction"])
+    coll = max(
+        ok,
+        key=lambda c: c["roofline"]["t_collective_s"]
+        / max(c["roofline"]["t_compute_s"] + c["roofline"]["t_memory_s"], 1e-12),
+    )
+    print("\n### Hillclimb shortlist")
+    print(f"worst train-cell roofline fraction: {worst['roofline']['cell']}")
+    print(f"most collective-bound: {coll['roofline']['cell']}")
+
+
+if __name__ == "__main__":
+    main()

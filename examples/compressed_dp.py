@@ -1,0 +1,60 @@
+"""int8 error-feedback gradient compression over the data axis (shard_map).
+
+Demonstrates the distributed-optimization path: per-shard gradients are
+quantized to int8, psum'd in int32, dequantized — a 4x cut of DP wire bytes —
+with an error-feedback accumulator keeping convergence intact.  On this CPU box
+the mesh has one device; the code is identical on a 512-chip mesh.
+
+Run: PYTHONPATH=src python examples/compressed_dp.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.collectives import compressed_psum_mean, wire_bytes_saved
+
+mesh = Mesh(np.asarray(jax.devices()), ("data",))
+
+# a toy regression model trained with compressed gradient sync
+w = jnp.zeros((16,))
+true_w = jnp.asarray(np.random.default_rng(0).normal(size=(16,)))
+n_shards = len(mesh.devices)
+# the error-feedback accumulator is PER-SHARD state: leading data-sharded axis
+err = {"w": jnp.zeros((n_shards, 16))}
+
+
+def grads_fn(w, x, y):
+    pred = x @ w
+    return {"w": 2 * x.T @ (pred - y) / x.shape[0]}
+
+
+@jax.jit
+def step(w, err, x, y):
+    def f(x, y, err):
+        g = grads_fn(w, x, y)
+        mean_g, new_e = compressed_psum_mean(
+            g, {k: v[0] for k, v in err.items()}, "data"
+        )
+        return mean_g, {k: v[None] for k, v in new_e.items()}
+
+    mean_g, new_err = shard_map(
+        f,
+        mesh=mesh,
+        in_specs=(P("data"), P("data"), P("data")),
+        out_specs=(P(), P("data")),
+        check_vma=False,  # mean_g replication is established by the psum
+    )(x, y, err)
+    return w - 0.1 * mean_g["w"], new_err
+
+
+rng = np.random.default_rng(1)
+for i in range(300):
+    x = jnp.asarray(rng.normal(size=(64, 16)))
+    y = x @ true_w + 0.01 * jnp.asarray(rng.normal(size=(64,)))
+    w, err = step(w, err, x, y)
+
+print(f"||w - w*|| = {float(jnp.linalg.norm(w - true_w)):.4f} (converged with int8 sync)")
+stats = wire_bytes_saved({"w": w})
+print(f"wire bytes per sync: fp32 {stats['fp32_bytes']:.0f} -> int8 {stats['int8_bytes']:.0f} ({stats['ratio']:.0f}x)")

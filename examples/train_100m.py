@@ -1,0 +1,80 @@
+"""End-to-end training driver.
+
+Presets:
+  tiny   (~6M params, default)  — runs a real 200-step training on this CPU box;
+  100m   (~104M params)         — the assignment's 100M config (olmo family);
+  any assigned arch id          — full published config (TPU-scale; use the
+                                  dry-run for those on CPU).
+
+The driver uses the full production stack: blueprint shardings, Trainer with
+async checkpointing + fault tolerance + straggler tracking, deterministic data
+pipeline.  Restart the same command after killing it mid-run: it resumes from
+the newest committed checkpoint.
+
+Run: PYTHONPATH=src python examples/train_100m.py --preset tiny --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.data.pipeline import SyntheticTokenDataset
+from repro.launch.mesh import make_test_mesh
+from repro.models import build_model
+from repro.optim.optimizers import make_optimizer
+from repro.train.trainer import Trainer, TrainerConfig
+
+PRESETS = {
+    "tiny": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=4, d_ff=1024,
+                 vocab=8192, head_dim=64, seq=256, batch=8),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+                 vocab=50304, head_dim=64, seq=1024, batch=32),
+}
+
+
+def make_cfg(preset: str) -> tuple[ArchConfig, ShapeConfig]:
+    if preset in PRESETS:
+        p = dict(PRESETS[preset])
+        seq, batch = p.pop("seq"), p.pop("batch")
+        base = get_arch("olmo-1b")
+        cfg = dataclasses.replace(
+            base, name=f"olmo-{preset}", compute_dtype="float32", attn_chunk=256, **p
+        )
+        return cfg, ShapeConfig(preset, seq_len=seq, global_batch=batch, kind="train")
+    cfg = get_arch(preset)
+    return cfg, ShapeConfig("train_4k", 4096, 256, "train")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="results/train_example")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg, shape = make_cfg(args.preset)
+    model = build_model(cfg)
+    print(f"arch={cfg.name}: ~{cfg.n_params()/1e6:.1f}M params, "
+          f"seq={shape.seq_len} batch={shape.global_batch}")
+    mesh = make_test_mesh(1, 1)
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=25, peak_lr=args.lr)
+    trainer = Trainer(model, make_optimizer("adamw"), mesh, shape, tcfg)
+    ds = SyntheticTokenDataset(cfg.vocab, shape.seq_len, shape.global_batch, seed=0)
+    trainer.fit(jax.random.PRNGKey(0), ds, n_steps=args.steps)
+    steps = [e for e in trainer.log if e["event"] == "step"]
+    first = sum(s["loss"] for s in steps[:10]) / max(len(steps[:10]), 1)
+    last = sum(s["loss"] for s in steps[-10:]) / max(len(steps[-10:]), 1)
+    print(f"loss: first-10 avg {first:.3f} -> last-10 avg {last:.3f}")
+    print(f"stragglers={trainer.stragglers} restarts={trainer.restarts}")
+    with open(f"{args.ckpt_dir}/log.json", "w") as f:
+        json.dump(trainer.log, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: 'Opening the Black Box' (Ernst et al. 2021) as a production JAX/TPU
+framework — analytic performance estimation during code generation, plus the
+training/serving substrate it is embedded in. See README.md."""

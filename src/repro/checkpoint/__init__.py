@@ -1,0 +1,1 @@
+from .manager import AsyncCheckpointer, latest_step, restore  # noqa: F401

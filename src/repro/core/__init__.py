@@ -1,0 +1,39 @@
+"""repro.core — the paper's contribution: analytic hardware-metric estimation +
+multi-limiter roofline performance modeling for code-generation-time configuration
+selection, on GPU (faithful reproduction) and TPU (Pallas/mesh adaptation)."""
+
+from .address import (  # noqa: F401
+    Access,
+    Field,
+    KernelSpec,
+    LaunchConfig,
+    ThreadBox,
+    dedupe_accesses,
+    fold_accesses,
+)
+from .capacity import DEFAULT_FITS, CapacityFits, Sigmoid, fit_sigmoid  # noqa: F401
+from .estimator import VolumeEstimate, estimate  # noqa: F401
+from .machine import (  # noqa: F401
+    MULTI_POD_MESH,
+    SINGLE_POD_MESH,
+    TPU_V5E,
+    V100,
+    GPUMachine,
+    MeshSpec,
+    TPUMachine,
+)
+from .model import Prediction, predict, predict_from_volumes  # noqa: F401
+from .ranking import (  # noqa: F401
+    RankedConfig,
+    kendall_tau,
+    rank_configs,
+    spearman_rho,
+    top_k,
+)
+from .roofline import RooflineReport, build_report, model_flops_lm  # noqa: F401
+from .tpu_estimator import (  # noqa: F401
+    BlockAccess,
+    PallasConfig,
+    TPUEstimate,
+    select_config,
+)

@@ -1,0 +1,73 @@
+"""L1 cache-bank conflict model (paper §III.B).
+
+Volta/Ampere L1: 128 B / cycle best case; a 128 B cache line is spread over 16 banks
+of 8 B each.  A half-warp (16 threads) memory instruction completes in as many cycles
+as the maximum number of *unique* 8 B words it needs from any single bank.
+
+We compute, for every load of a kernel and every half-warp of a representative thread
+block, the referenced addresses, and take the total L1→register time of the block as
+the sum over loads of the per-half-warp bank cycles (paper: "the sum of bank
+conflicts of all loads").
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .address import Access, KernelSpec, ThreadBox
+
+
+def halfwarp_cycles(
+    words: np.ndarray, n_banks: int = 16, half_warp: int = 16
+) -> np.ndarray:
+    """Cycles per half-warp row.
+
+    ``words``: int64 array (n_halfwarps, half_warp) of 8B-word indices.
+    Duplicate words within a half warp are served by one broadcast access.
+    """
+    n_rows = words.shape[0]
+    rows = np.repeat(np.arange(n_rows, dtype=np.int64), words.shape[1])
+    flat = words.ravel()
+    # unique (row, word) pairs
+    pairs = np.stack([rows, flat], axis=1)
+    uniq = np.unique(pairs, axis=0)
+    urows, uwords = uniq[:, 0], uniq[:, 1]
+    banks = uwords % n_banks
+    counts = np.bincount(urows * n_banks + banks, minlength=n_rows * n_banks)
+    return counts.reshape(n_rows, n_banks).max(axis=1)
+
+
+def block_l1_cycles(
+    accesses: Sequence[Access],
+    box: ThreadBox,
+    word_bytes: int = 8,
+    n_banks: int = 16,
+    half_warp: int = 16,
+) -> int:
+    """Total L1→register cycles for one thread block (loads only)."""
+    tx, ty, tz = box.coords_flat_warp_order()
+    n = tx.size
+    total = 0
+    for a in accesses:
+        if a.is_store:
+            continue
+        addr = a.byte_address(tx, ty, tz)
+        words = addr // word_bytes
+        pad = (-n) % half_warp
+        if pad:
+            words = np.concatenate([words, np.repeat(words[-1], pad)])
+        rows = words.reshape(-1, half_warp)
+        total += int(halfwarp_cycles(rows, n_banks, half_warp).sum())
+    return total
+
+
+def l1_cycles_per_lup(spec: KernelSpec, interior_block: ThreadBox | None = None) -> float:
+    """L1 cycles per lattice update for a representative interior block (Fig 5)."""
+    if interior_block is None:
+        from .waves import interior_block_box
+
+        interior_block = interior_block_box(spec.launch)
+    cycles = block_l1_cycles(spec.accesses, interior_block)
+    lups = interior_block.count * spec.lups_per_thread
+    return cycles / max(lups, 1)

@@ -1,0 +1,170 @@
+"""Level-by-level hardware-metric estimation (paper §III).
+
+Given a :class:`KernelSpec` (address expressions + launch config) and a machine
+model, estimate per lattice update:
+
+  * L1→register cycles (bank conflicts, §III.B),
+  * L2→L1 load/store volumes (block footprints + capacity model, §III.F),
+  * DRAM→L2 load/store volumes (wave footprints + overlap + capacity, §III.G),
+
+with either the enumeration (§III.D.1) or the symbolic (§III.D.2) footprint method.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import footprint as fp_enum
+from . import symset as fp_sym
+from .address import KernelSpec, ThreadBox
+from .bankconflict import block_l1_cycles
+from .capacity import DEFAULT_FITS, CapacityFits
+from .machine import V100, GPUMachine
+from .waves import Wave, interior_block_box, representative_waves, wave_size
+
+
+@dataclass
+class VolumeEstimate:
+    """All per-LUP metrics the performance model consumes (bytes / cycles / flops)."""
+
+    kernel: str
+    block: tuple[int, int, int]
+    fold: tuple[int, int, int]
+    l1_cycles: float = 0.0  # L1->reg cycles per LUP
+    v_l1_up_load: float = 0.0  # reg<-L1 requested load volume (32B sectors)
+    v_l2l1_load: float = 0.0  # L2->L1 load volume
+    v_l2l1_load_comp: float = 0.0  # ... compulsory part
+    v_l2l1_load_cap: float = 0.0  # ... capacity part
+    v_l2l1_store: float = 0.0  # L1->L2 store volume (write-through)
+    v_dram_load: float = 0.0  # DRAM->L2 load volume
+    v_dram_load_comp: float = 0.0
+    v_dram_load_overlap_miss: float = 0.0
+    v_dram_load_cap: float = 0.0
+    v_dram_store: float = 0.0  # L2->DRAM store volume
+    flops: float = 0.0
+    l1_oversubscription: float = 0.0
+    l2_oversubscription: float = 0.0
+    l2_coverage: float = 0.0
+    wave_blocks: int = 0
+    detail: dict = field(default_factory=dict)
+
+    @property
+    def v_dram(self) -> float:
+        return self.v_dram_load + self.v_dram_store
+
+    @property
+    def v_l2l1(self) -> float:
+        return self.v_l2l1_load + self.v_l2l1_store
+
+
+def _footprint_fns(method: str):
+    if method == "enum":
+        return fp_enum.line_sets, fp_enum.overlap_bytes, "enum"
+    if method == "sym":
+        return fp_sym.field_interval_sets, fp_sym.overlap_bytes, "sym"
+    raise ValueError(f"unknown footprint method {method!r}")
+
+
+def _set_bytes(sets, granularity: int, method: str) -> int:
+    if method == "enum":
+        return sum(len(s) for s in sets.values()) * granularity
+    return sum(s.cardinality for s in sets.values()) * granularity
+
+
+def estimate(
+    spec: KernelSpec,
+    machine: GPUMachine = V100,
+    fits: CapacityFits = DEFAULT_FITS,
+    method: str = "sym",
+) -> VolumeEstimate:
+    """Run the full paper §III estimation pipeline for one configuration."""
+    line_sets_fn, overlap_fn, m = _footprint_fns(method)
+    sector, line = machine.sector_bytes, machine.line_bytes
+    est = VolumeEstimate(
+        kernel=spec.name,
+        block=spec.launch.block,
+        fold=tuple(spec.meta.get("fold", (1, 1, 1))),
+        flops=spec.flops_per_lup,
+    )
+
+    # ---- L1 (collaborative group = one thread block, §III.F) ----------------
+    blk = interior_block_box(spec.launch)
+    blk_lups = max(1, blk.count * spec.lups_per_thread)
+    est.l1_cycles = block_l1_cycles(spec.accesses, blk) / blk_lups
+
+    v_up_load = fp_enum.warp_requested_bytes(spec.accesses, blk, sector, stores=False)
+    load_sets = line_sets_fn(spec.accesses, [blk], sector, stores=False)
+    v_comp_l1 = _set_bytes(load_sets, sector, m)
+    alloc_sets = line_sets_fn(spec.accesses, [blk], line, stores=False)
+    v_alloc_l1 = _set_bytes(alloc_sets, line, m)  # 128B allocation granularity
+    o_l1 = v_alloc_l1 / machine.l1_bytes
+    r_l1 = fits.l1(o_l1)
+    v_red_l1 = max(0.0, v_up_load - v_comp_l1)
+    est.l1_oversubscription = o_l1
+    est.v_l1_up_load = v_up_load / blk_lups
+    est.v_l2l1_load_comp = v_comp_l1 / blk_lups
+    est.v_l2l1_load_cap = r_l1 * v_red_l1 / blk_lups
+    est.v_l2l1_load = est.v_l2l1_load_comp + est.v_l2l1_load_cap
+    # L1 is write-through (§III.F): every store instruction's sectors pass to L2.
+    v_store_through = fp_enum.warp_requested_bytes(
+        spec.accesses, blk, sector, stores=True
+    )
+    est.v_l2l1_store = v_store_through / blk_lups
+
+    # ---- L2 / DRAM (collaborative group = wave of blocks, §III.G) -----------
+    pairs = representative_waves(spec, machine)
+    est.wave_blocks = wave_size(spec, machine)
+    dram_load = dram_load_comp = dram_load_over = dram_load_cap = 0.0
+    dram_store = 0.0
+    o_l2_acc = cov_acc = 0.0
+    for prev, curr in pairs:
+        curr_boxes = curr.merged_boxes(spec.launch)
+        wave_lups = max(1, sum(b.count for b in curr_boxes) * spec.lups_per_thread)
+        curr_load_sets = line_sets_fn(spec.accesses, curr_boxes, sector, stores=False)
+        v_curr = _set_bytes(curr_load_sets, sector, m)
+        if prev.n:
+            prev_boxes = prev.merged_boxes(spec.launch)
+            prev_load_sets = line_sets_fn(
+                spec.accesses, prev_boxes, sector, stores=False
+            )
+            v_prev = _set_bytes(prev_load_sets, sector, m)
+            v_overlap = overlap_fn(curr_load_sets, prev_load_sets, sector)
+        else:
+            v_prev, v_overlap = 0, 0
+        # L2 allocation: loads + stores at 128B lines (stores allocate in L2)
+        alloc_sets_l2 = line_sets_fn(spec.accesses, curr_boxes, line, stores=None)
+        v_alloc_l2 = _set_bytes(alloc_sets_l2, line, m)
+        o_l2 = v_alloc_l2 / machine.l2_bytes
+        cov = (
+            (machine.l2_bytes - (v_curr - v_overlap)) / v_prev if v_prev else 1e9
+        )
+        r_over = fits.overmiss(cov) if v_prev else 0.0
+        r_l2 = fits.l2_load(o_l2)
+        # requests arriving at L2 = sum of the per-block L2<-L1 volumes
+        v_up_l2 = est.v_l2l1_load * wave_lups
+        v_red_l2 = max(0.0, v_up_l2 - v_curr)
+        comp = v_curr - v_overlap
+        over = r_over * v_overlap
+        cap = r_l2 * v_red_l2
+        dram_load += (comp + over + cap) / wave_lups
+        dram_load_comp += comp / wave_lups
+        dram_load_over += over / wave_lups
+        dram_load_cap += cap / wave_lups
+        # stores: unique wave store footprint + capacity-missed redundant stores
+        store_sets = line_sets_fn(spec.accesses, curr_boxes, sector, stores=True)
+        v_store_unique = _set_bytes(store_sets, sector, m)
+        v_up_l2_store = est.v_l2l1_store * wave_lups
+        v_red_store = max(0.0, v_up_l2_store - v_store_unique)
+        dram_store += (v_store_unique + fits.l2_store(o_l2) * v_red_store) / wave_lups
+        o_l2_acc += o_l2
+        cov_acc += min(cov, 1e9)
+    n = len(pairs)
+    est.v_dram_load = dram_load / n
+    est.v_dram_load_comp = dram_load_comp / n
+    est.v_dram_load_overlap_miss = dram_load_over / n
+    est.v_dram_load_cap = dram_load_cap / n
+    est.v_dram_store = dram_store / n
+    est.l2_oversubscription = o_l2_acc / n
+    est.l2_coverage = cov_acc / n
+    return est

@@ -1,0 +1,116 @@
+"""Enumeration footprint method (paper §III.D.1).
+
+Direct, vectorized enumeration of all referenced addresses of a collaborative group
+(numpy meshgrid + unique), counting unique cache lines per field.  Fields are counted
+separately because base addresses are replaced by alignments (no-aliasing assumption).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from .address import Access, ThreadBox
+
+
+def _addresses(access: Access, boxes: Sequence[ThreadBox]) -> np.ndarray:
+    """Byte addresses referenced by ``access`` for all threads in ``boxes``."""
+    chunks = []
+    for box in boxes:
+        if box.count <= 0:
+            continue
+        tx, ty, tz = box.coords()
+        chunks.append(access.byte_address(tx, ty, tz))
+    if not chunks:
+        return np.empty((0,), dtype=np.int64)
+    return np.concatenate(chunks)
+
+
+def line_sets(
+    accesses: Sequence[Access],
+    boxes: Sequence[ThreadBox],
+    granularity: int,
+    stores: bool | None = None,
+) -> dict[str, np.ndarray]:
+    """Unique cache-line indices per field (sorted arrays).
+
+    ``stores``: None = all accesses, True = stores only, False = loads only.
+    """
+    per_field: dict[str, list[np.ndarray]] = {}
+    for a in accesses:
+        if stores is not None and a.is_store != stores:
+            continue
+        addrs = _addresses(a, boxes)
+        if addrs.size:
+            per_field.setdefault(a.field.name, []).append(addrs // granularity)
+    return {
+        name: np.unique(np.concatenate(chunks)) for name, chunks in per_field.items()
+    }
+
+
+def footprint_bytes(
+    accesses: Sequence[Access],
+    boxes: Sequence[ThreadBox],
+    granularity: int,
+    stores: bool | None = None,
+) -> int:
+    """Unique data footprint in bytes at the given line granularity (paper Fig 4)."""
+    sets = line_sets(accesses, boxes, granularity, stores=stores)
+    return sum(len(s) for s in sets.values()) * granularity
+
+
+def overlap_bytes(
+    a_sets: Mapping[str, np.ndarray],
+    b_sets: Mapping[str, np.ndarray],
+    granularity: int,
+) -> int:
+    """|A ∩ B| in bytes for two footprints (per-field line sets)."""
+    total = 0
+    for name, a in a_sets.items():
+        b = b_sets.get(name)
+        if b is not None and len(a) and len(b):
+            total += np.intersect1d(a, b, assume_unique=True).size
+    return total * granularity
+
+
+def warp_requested_bytes(
+    accesses: Sequence[Access],
+    box: ThreadBox,
+    granularity: int,
+    warp_size: int = 32,
+    stores: bool | None = False,
+) -> int:
+    """V_up: volume requested from the cache, at per-warp-instruction granularity.
+
+    Each warp memory instruction requests the set of unique ``granularity``-byte
+    sectors its threads touch; repeated requests across instructions/warps are
+    counted individually (they are "repeated requests for data" -> V_red candidates).
+    """
+    tx, ty, tz = box.coords_flat_warp_order()
+    n = tx.size
+    total_sectors = 0
+    for a in accesses:
+        if stores is not None and a.is_store != stores:
+            continue
+        addr = a.byte_address(tx, ty, tz) // granularity
+        pad = (-n) % warp_size
+        if pad:
+            addr = np.concatenate([addr, np.repeat(addr[-1], pad)])
+        rows = addr.reshape(-1, warp_size)
+        rows = np.sort(rows, axis=1)
+        uniq = (np.diff(rows, axis=1) != 0).sum(axis=1) + 1
+        total_sectors += int(uniq.sum())
+    return total_sectors * granularity
+
+
+def total_access_bytes(
+    accesses: Sequence[Access], boxes: Sequence[ThreadBox], stores: bool | None = None
+) -> int:
+    """Raw requested bytes (one element per thread per access), no granularity."""
+    total = 0
+    nthreads = sum(b.count for b in boxes)
+    for a in accesses:
+        if stores is not None and a.is_store != stores:
+            continue
+        total += nthreads * a.field.element_size
+    return total

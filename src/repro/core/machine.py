@@ -1,0 +1,114 @@
+"""Machine models: the paper's V100 (GPU, faithful reproduction target) and the
+TPU v5e (our adaptation target), plus the multi-chip ICI fabric.
+
+V100 numbers are the paper's §IV.A measured/configured values: 80 SMs @ 1.38 GHz, L1 128 kB
+(configured), L2 6 MB, 790 GB/s DRAM (STREAM scale), 2500 GB/s L2 bandwidth.
+
+TPU v5e numbers are the assignment's hardware constants: 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI; VMEM 128 MB, (8,128) native vector tiling, 128x128
+MXU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class GPUMachine:
+    name: str = "V100-PCIe-32GB"
+    n_sm: int = 80
+    clock_hz: float = 1.38e9
+    l1_bytes: int = 128 * 1024
+    l2_bytes: int = 6 * 1024 * 1024
+    bw_dram: float = 790e9  # B/s, STREAM scale
+    bw_l2: float = 2500e9  # B/s
+    peak_fp64: float = 7.066e12  # 80 SM * 32 FP64 lanes * 2 flop * 1.38 GHz
+    line_bytes: int = 128  # allocation granularity (L1 + L2)
+    sector_bytes: int = 32  # transfer granularity
+    n_banks: int = 16
+    bank_bytes: int = 8
+    max_threads_per_sm: int = 2048
+    max_blocks_per_sm: int = 32
+    regs_per_sm: int = 65536  # 32-bit registers
+
+    def blocks_per_sm(self, block_threads: int, regs_per_thread: int) -> int:
+        """Occupancy: thread-, block- and register-file-limited blocks per SM."""
+        if block_threads <= 0:
+            return 0
+        by_threads = self.max_threads_per_sm // block_threads
+        # DP kernels: regs_per_thread counted in 32-bit registers already
+        by_regs = self.regs_per_sm // max(regs_per_thread * block_threads, 1)
+        return max(1, min(by_threads, by_regs, self.max_blocks_per_sm))
+
+    @property
+    def machine_balance_fp64(self) -> float:
+        """Flop/B at DRAM — paper: 4 Flop/B for the stencil instruction mix."""
+        return self.peak_fp64 / self.bw_dram / 2  # FMA-mix derating, cf. §IV.C
+
+
+V100 = GPUMachine()
+
+
+@dataclass(frozen=True)
+class TPUMachine:
+    """Single TPU chip (v5e-class) + ICI fabric constants."""
+
+    name: str = "tpu-v5e"
+    peak_bf16: float = 197e12  # FLOP/s per chip
+    peak_fp32: float = 98.5e12
+    bw_hbm: float = 819e9  # B/s per chip
+    hbm_bytes: int = 16 * 2**30
+    vmem_bytes: int = 128 * 2**20
+    vmem_usable: int = 100 * 2**20  # leave headroom for XLA-reserved scratch
+    bw_ici_link: float = 50e9  # B/s per link per direction
+    ici_links: int = 4  # 2D torus: +-x, +-y
+    bw_inter_pod: float = 25e9  # effective per-chip cross-pod (DCN-assisted) B/s
+    mxu_dim: int = 128
+    sublanes: int = 8  # native (8, 128) fp32 vector tile
+    lanes: int = 128
+    vpu_flops: float = 4e12  # elementwise VPU throughput, FLOP/s
+
+    def peak_flops(self, dtype_bits: int) -> float:
+        return self.peak_bf16 if dtype_bits <= 16 else self.peak_fp32
+
+    def sublane_multiple(self, dtype_bits: int) -> int:
+        """Second-to-last-dim tiling multiple: (8,128) fp32, (16,128) bf16, (32,128) int8."""
+        return self.sublanes * max(1, 32 // dtype_bits)
+
+
+TPU_V5E = TPUMachine()
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Logical device mesh over the ICI fabric (axis name -> size)."""
+
+    axes: tuple[tuple[str, int], ...]
+    inter_pod_axes: tuple[str, ...] = ("pod",)
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for _, s in self.axes:
+            n *= s
+        return n
+
+    def axis_size(self, name: str) -> int:
+        for a, s in self.axes:
+            if a == name:
+                return s
+        raise KeyError(name)
+
+    def axis_bandwidth(self, name: str, tpu: TPUMachine = TPU_V5E) -> float:
+        """Per-chip bandwidth available to collectives on one mesh axis.
+
+        Intra-pod axes ride the 2D torus (2 links per axis direction pair);
+        the pod axis crosses the data-center network.
+        """
+        if name in self.inter_pod_axes:
+            return tpu.bw_inter_pod
+        return 2 * tpu.bw_ici_link  # bidirectional ring on one torus dimension
+
+
+SINGLE_POD_MESH = MeshSpec(axes=(("data", 16), ("model", 16)))
+MULTI_POD_MESH = MeshSpec(axes=(("pod", 2), ("data", 16), ("model", 16)))

@@ -1,0 +1,79 @@
+"""Configuration-space exploration and ranking (paper §I.A, §IV.H).
+
+The code generator enumerates candidate configurations; the estimator + model rank
+them, replacing the generate→compile→benchmark autotuning cycle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .address import KernelSpec
+from .capacity import DEFAULT_FITS, CapacityFits
+from .estimator import VolumeEstimate, estimate
+from .machine import V100, GPUMachine
+from .model import Prediction, predict
+
+
+@dataclass
+class RankedConfig:
+    config: dict
+    estimate: VolumeEstimate
+    prediction: Prediction
+
+    @property
+    def glups(self) -> float:
+        return self.prediction.glups
+
+
+def rank_configs(
+    build: Callable[..., KernelSpec],
+    configs: Sequence[dict],
+    machine: GPUMachine = V100,
+    fits: CapacityFits = DEFAULT_FITS,
+    method: str = "sym",
+) -> list[RankedConfig]:
+    """Estimate + predict every configuration; return sorted best-first."""
+    out: list[RankedConfig] = []
+    for cfg in configs:
+        spec = build(**cfg)
+        est = estimate(spec, machine, fits, method=method)
+        pred = predict(spec, est, machine)
+        out.append(RankedConfig(config=dict(cfg), estimate=est, prediction=pred))
+    out.sort(key=lambda r: -r.glups)
+    return out
+
+
+def top_k(ranked: Sequence[RankedConfig], k: int = 5) -> list[RankedConfig]:
+    return list(ranked[:k])
+
+
+def kendall_tau(a: Sequence[float], b: Sequence[float]) -> float:
+    """Kendall rank correlation (no scipy offline). O(n^2), fine for <=few hundred."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    n = a.size
+    assert b.size == n
+    if n < 2:
+        return 1.0
+    da = np.sign(a[:, None] - a[None, :])
+    db = np.sign(b[:, None] - b[None, :])
+    iu = np.triu_indices(n, k=1)
+    prod = da[iu] * db[iu]
+    concordant = (prod > 0).sum()
+    discordant = (prod < 0).sum()
+    denom = concordant + discordant
+    return float((concordant - discordant) / denom) if denom else 1.0
+
+
+def spearman_rho(a: Sequence[float], b: Sequence[float]) -> float:
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    ra = np.argsort(np.argsort(a)).astype(np.float64)
+    rb = np.argsort(np.argsort(b)).astype(np.float64)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra**2).sum() * (rb**2).sum())
+    return float((ra * rb).sum() / denom) if denom else 1.0

@@ -1,0 +1,172 @@
+"""Symbolic integer-set footprint method (paper §III.D.2, "ISL").
+
+The Integer Set Library is not available offline, so this module implements the
+subset of functionality the paper uses, natively:
+
+* the image of a rectangular thread set under an affine address map, at cache-line
+  granularity, is represented as a union of intervals of line indices;
+* for the (ubiquitous) unit-stride-x accesses, the x dimension is collapsed
+  *analytically* into one interval per (y, z) lattice row — evaluation cost is
+  O(ny*nz) instead of O(nx*ny*nz), reproducing ISL's key property that runtime is
+  decoupled from the number of threads in the contiguous dimension;
+* unions / cardinality / intersection of interval sets (used for wave overlap).
+
+All interval endpoints are half-open ``[start, end)`` line indices.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .address import Access, ThreadBox
+
+
+class IntervalSet:
+    """A union of half-open intervals over integer line indices."""
+
+    __slots__ = ("starts", "ends")
+
+    def __init__(self, starts: np.ndarray, ends: np.ndarray, disjoint: bool = False):
+        starts = np.asarray(starts, dtype=np.int64)
+        ends = np.asarray(ends, dtype=np.int64)
+        if not disjoint and starts.size:
+            order = np.argsort(starts, kind="stable")
+            s, e = starts[order], ends[order]
+            cummax = np.maximum.accumulate(e)
+            # interval i starts a new merged run iff s[i] > cummax[i-1]
+            new_run = np.empty(s.size, dtype=bool)
+            new_run[0] = True
+            new_run[1:] = s[1:] > cummax[:-1]
+            run_id = np.cumsum(new_run) - 1
+            n_runs = run_id[-1] + 1
+            ms = s[new_run]
+            me = np.full(n_runs, np.iinfo(np.int64).min, dtype=np.int64)
+            np.maximum.at(me, run_id, e)
+            starts, ends = ms, me
+        self.starts = starts
+        self.ends = ends
+
+    @property
+    def cardinality(self) -> int:
+        return int((self.ends - self.starts).sum())
+
+    def intersect(self, other: "IntervalSet") -> "IntervalSet":
+        """Two-pointer intersection of disjoint, sorted interval unions."""
+        a_s, a_e = self.starts, self.ends
+        b_s, b_e = other.starts, other.ends
+        out_s, out_e = [], []
+        i = j = 0
+        while i < a_s.size and j < b_s.size:
+            lo = max(a_s[i], b_s[j])
+            hi = min(a_e[i], b_e[j])
+            if lo < hi:
+                out_s.append(lo)
+                out_e.append(hi)
+            if a_e[i] < b_e[j]:
+                i += 1
+            else:
+                j += 1
+        return IntervalSet(
+            np.asarray(out_s, dtype=np.int64),
+            np.asarray(out_e, dtype=np.int64),
+            disjoint=True,
+        )
+
+    def union(self, other: "IntervalSet") -> "IntervalSet":
+        return IntervalSet(
+            np.concatenate([self.starts, other.starts]),
+            np.concatenate([self.ends, other.ends]),
+        )
+
+    @staticmethod
+    def empty() -> "IntervalSet":
+        z = np.empty((0,), dtype=np.int64)
+        return IntervalSet(z, z, disjoint=True)
+
+
+def _access_intervals(
+    access: Access, box: ThreadBox, granularity: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Raw (unmerged) line intervals of one access over one thread box.
+
+    For unit-stride-in-x accesses (cx == element stride along the run), each (y, z)
+    row maps to one contiguous byte run -> one line interval.  Otherwise we fall
+    back to per-element intervals along x (still vectorized).
+    """
+    (x0, x1), (y0, y1), (z0, z1) = box.x, box.y, box.z
+    if x1 <= x0 or y1 <= y0 or z1 <= z0:
+        z = np.empty((0,), dtype=np.int64)
+        return z, z
+    cx, cy, cz = access.coeffs
+    es = access.field.element_size
+    ys = np.arange(y0, y1, dtype=np.int64)
+    zs = np.arange(z0, z1, dtype=np.int64)
+    row_base = (
+        access.field.alignment
+        + (access.offset + cy * ys[:, None] + cz * zs[None, :]) * es
+    ).ravel()
+    if cx >= 0:
+        lo = row_base + cx * x0 * es
+        hi_incl = row_base + (cx * (x1 - 1)) * es + (es - 1)
+    else:
+        lo = row_base + cx * (x1 - 1) * es
+        hi_incl = row_base + cx * x0 * es + (es - 1)
+    if abs(cx) == 1:
+        # contiguous run per row: exact interval of touched lines
+        return lo // granularity, hi_incl // granularity + 1
+    # strided x: enumerate x offsets, one (possibly 1-line) interval per element
+    xs = np.arange(x0, x1, dtype=np.int64)
+    addr = (row_base[:, None] + (cx * xs * es)[None, :]).ravel()
+    return addr // granularity, (addr + es - 1) // granularity + 1
+
+
+def field_interval_sets(
+    accesses: Sequence[Access],
+    boxes: Sequence[ThreadBox],
+    granularity: int,
+    stores: bool | None = None,
+) -> dict[str, IntervalSet]:
+    """Per-field union-of-intervals footprints (the symbolic analogue of
+    :func:`repro.core.footprint.line_sets`)."""
+    per_field: dict[str, list[tuple[np.ndarray, np.ndarray]]] = {}
+    for a in accesses:
+        if stores is not None and a.is_store != stores:
+            continue
+        for box in boxes:
+            s, e = _access_intervals(a, box, granularity)
+            if s.size:
+                per_field.setdefault(a.field.name, []).append((s, e))
+    out: dict[str, IntervalSet] = {}
+    for name, chunks in per_field.items():
+        starts = np.concatenate([c[0] for c in chunks])
+        ends = np.concatenate([c[1] for c in chunks])
+        out[name] = IntervalSet(starts, ends)
+    return out
+
+
+def footprint_bytes(
+    accesses: Sequence[Access],
+    boxes: Sequence[ThreadBox],
+    granularity: int,
+    stores: bool | None = None,
+) -> int:
+    """Unique footprint in bytes — symbolic method; must equal the enumeration
+    method exactly (property-tested)."""
+    sets = field_interval_sets(accesses, boxes, granularity, stores=stores)
+    return sum(s.cardinality for s in sets.values()) * granularity
+
+
+def overlap_bytes(
+    a_sets: Mapping[str, IntervalSet],
+    b_sets: Mapping[str, IntervalSet],
+    granularity: int,
+) -> int:
+    """|A ∩ B| in bytes (paper: "the ISL also allows ... the intersection of two
+    address sets, which we use to compute the overlap of two data footprints")."""
+    total = 0
+    for name, a in a_sets.items():
+        b = b_sets.get(name)
+        if b is not None:
+            total += a.intersect(b).cardinality
+    return total * granularity

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel subpackage has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with estimator-guided configuration selection) and ref.py (pure-jnp oracle).
+"""

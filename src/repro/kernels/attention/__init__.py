@@ -1,0 +1,1 @@
+from .ops import config_space, flash_attention, mha_ref, select_blocks  # noqa: F401

@@ -1,0 +1,120 @@
+"""jit'd wrapper + estimator-guided block selection for flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core import tpu_estimator as te
+from ...core.machine import TPU_V5E, TPUMachine
+from .kernel import flash_attention_pallas
+from .ref import mha_ref
+
+CANDIDATE_BLOCKS = (128, 256, 512, 1024)
+
+
+def config_space(
+    b: int, hq: int, hkv: int, s: int, d: int, dtype_bits: int, causal: bool = True
+):
+    """Candidate (block_q, block_kv) configs.
+
+    The kv refetch across the q-block loop is the V_red analogue: k/v blocks are
+    refetched for every q block of the same head.  Larger kv blocks reduce grid
+    overhead but raise VMEM; the estimator trades these off analytically.
+    """
+    group = max(1, hq // max(hkv, 1))
+    out = []
+    for bq in CANDIDATE_BLOCKS:
+        for bkv in CANDIDATE_BLOCKS:
+            if s % bq or s % bkv:
+                continue
+            nq, nkv = s // bq, s // bkv
+            accesses = (
+                te.BlockAccess(
+                    "q", (1, bq, d), lambda bh, i, j: (bh, i, 0), dtype_bits
+                ),
+                te.BlockAccess(
+                    "k",
+                    (1, bkv, d),
+                    lambda bh, i, j, g=group, hq=hq, hkv=hkv: (
+                        (bh // hq) * hkv + (bh % hq) // g,
+                        j,
+                        0,
+                    ),
+                    dtype_bits,
+                ),
+                te.BlockAccess(
+                    "v",
+                    (1, bkv, d),
+                    lambda bh, i, j, g=group, hq=hq, hkv=hkv: (
+                        (bh // hq) * hkv + (bh % hq) // g,
+                        j,
+                        0,
+                    ),
+                    dtype_bits,
+                ),
+                te.BlockAccess(
+                    "o", (1, bq, d), lambda bh, i, j: (bh, i, 0), dtype_bits, True
+                ),
+            )
+            # causal: ~half the kv blocks do useful work; flops halve but the
+            # fetch schedule (grid) is unchanged
+            useful = 0.5 if causal else 1.0
+            out.append(
+                te.PallasConfig(
+                    name=f"flash_bq{bq}_bkv{bkv}",
+                    grid=(b * hq, nq, nkv),
+                    accesses=accesses,
+                    flops_per_step=useful * (4.0 * bq * bkv * d),
+                    is_matmul=True,
+                    scratch_bytes=4 * (bq * d + 2 * bq),
+                    meta={"block_q": bq, "block_kv": bkv},
+                )
+            )
+    return out
+
+
+def select_blocks(
+    b: int,
+    hq: int,
+    hkv: int,
+    s: int,
+    d: int,
+    dtype=jnp.bfloat16,
+    causal: bool = True,
+    machine: TPUMachine = TPU_V5E,
+) -> tuple[tuple[int, int], te.TPUEstimate]:
+    bits = jnp.dtype(dtype).itemsize * 8
+    cands = config_space(b, hq, hkv, s, d, bits, causal)
+    if not cands:
+        # sequences smaller than the smallest candidate: single block
+        return (s, s), None
+    cfg, est = te.select_config(cands, machine)
+    return (cfg.meta["block_q"], cfg.meta["block_kv"]), est
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    block_q: int | None = None,
+    block_kv: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    if block_q is None or block_kv is None:
+        (bq, bkv), _ = select_blocks(b, hq, hkv, s, d, q.dtype, causal)
+        block_q = block_q or min(bq, s)
+        block_kv = block_kv or min(bkv, s)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, block_q=block_q, block_kv=block_kv, interpret=interpret
+    )
+
+
+__all__ = ["flash_attention", "mha_ref", "select_blocks", "config_space"]

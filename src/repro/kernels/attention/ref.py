@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for (GQA) flash attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(
+    q: jnp.ndarray,  # (B, Hq, S, D)
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,  # (B, Hkv, S, D)
+    causal: bool = True,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

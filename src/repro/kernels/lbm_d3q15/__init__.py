@@ -1,0 +1,1 @@
+from .ops import config_space, init_fields, lbm_step, lbm_step_ref, select_block  # noqa: F401

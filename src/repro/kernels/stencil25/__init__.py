@@ -1,0 +1,1 @@
+from .ops import config_space, select_block, stencil25, stencil25_ref  # noqa: F401

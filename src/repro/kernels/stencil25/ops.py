@@ -1,0 +1,92 @@
+"""jit'd public wrapper for the stencil kernel + estimator-guided block selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core import tpu_estimator as te
+from ...core.machine import TPU_V5E, TPUMachine
+from .kernel import stencil25_pallas
+from .ref import stencil25_ref
+
+CANDIDATE_BLOCKS = ((8, 8), (8, 16), (16, 8), (16, 16), (16, 32), (32, 16), (32, 32), (64, 8), (8, 64))
+
+
+def config_space(shape: tuple[int, int, int], r: int, dtype_bits: int):
+    """Candidate PallasConfigs for `core.tpu_estimator` ranking.
+
+    Nine overlapping input tiles model the halo refetch redundancy; interior
+    (unclamped) index maps are used as the representative group (paper §III.D:
+    representative collaborative groups away from boundaries).
+    """
+    nz, ny, nx = shape
+    nxp = nx + 2 * r
+    out = []
+    for bz, by in CANDIDATE_BLOCKS:
+        if bz < r or by < r or nz % bz or ny % by:
+            continue
+        accesses = []
+        for k, (dz, dy) in enumerate(
+            [(dz, dy) for dz in (-1, 0, 1) for dy in (-1, 0, 1)]
+        ):
+            accesses.append(
+                te.BlockAccess(
+                    name=f"in{k}",
+                    block_shape=(bz, by, nxp),
+                    index_map=(lambda dz=dz, dy=dy: (lambda i, j: (i + dz, j + dy, 0)))(),
+                    dtype_bits=dtype_bits,
+                )
+            )
+        accesses.append(
+            te.BlockAccess(
+                name="out",
+                block_shape=(bz, by, nx),
+                index_map=lambda i, j: (i, j, 0),
+                dtype_bits=dtype_bits,
+                is_output=True,
+            )
+        )
+        out.append(
+            te.PallasConfig(
+                name=f"stencil_bz{bz}_by{by}",
+                grid=(nz // bz, ny // by),
+                accesses=tuple(accesses),
+                flops_per_step=2.0 * (6 * r + 1) * bz * by * nx,
+                is_matmul=False,
+                meta={"block": (bz, by)},
+            )
+        )
+    return out
+
+
+def select_block(
+    shape: tuple[int, int, int],
+    r: int = 4,
+    dtype=jnp.float32,
+    machine: TPUMachine = TPU_V5E,
+) -> tuple[tuple[int, int], te.TPUEstimate]:
+    """Estimator-guided configuration selection (the paper's selection problem)."""
+    bits = jnp.dtype(dtype).itemsize * 8
+    cands = config_space(shape, r, bits)
+    if not cands:
+        raise ValueError(f"no candidate block tiles divide grid {shape}")
+    cfg, est = te.select_config(cands, machine)
+    return cfg.meta["block"], est
+
+
+@functools.partial(jax.jit, static_argnames=("r", "block", "interpret"))
+def stencil25(
+    src: jnp.ndarray,
+    r: int = 4,
+    block: tuple[int, int] | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Range-r 3D star stencil; picks the block via the estimator when not given."""
+    if block is None:
+        block, _ = select_block(src.shape, r, src.dtype)
+    return stencil25_pallas(src, r=r, block=block, interpret=interpret)
+
+
+__all__ = ["stencil25", "stencil25_ref", "select_block", "config_space"]

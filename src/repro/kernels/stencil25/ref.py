@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the range-4 3D25pt star stencil (paper §IV.C)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def star_weights_np(r: int = 4) -> np.ndarray:
+    """Deterministic normalized weights: center + 6r axis neighbors (numpy)."""
+    n = 6 * r + 1
+    w = np.arange(1, n + 1, dtype=np.float64)
+    w /= w.sum()
+    return w
+
+
+def star_weights(r: int = 4, dtype=jnp.float32):
+    return jnp.asarray(star_weights_np(r), dtype=dtype)
+
+
+def star_offsets(r: int = 4) -> list[tuple[int, int, int]]:
+    """Canonical offset order (z, y, x): center, then per distance d the six
+    axis neighbors in (+x, -x, +y, -y, +z, -z) order.  The Pallas kernel and the
+    oracle share this list, so weights line up exactly."""
+    offs = [(0, 0, 0)]
+    for d in range(1, r + 1):
+        offs += [
+            (0, 0, d),
+            (0, 0, -d),
+            (0, d, 0),
+            (0, -d, 0),
+            (d, 0, 0),
+            (-d, 0, 0),
+        ]
+    return offs
+
+
+def stencil25_ref(src: jnp.ndarray, r: int = 4) -> jnp.ndarray:
+    """dst[p] = sum_d w_d * src[p + o_d]; boundary cells use edge-clamped halo.
+
+    ``src``: (nz, ny, nx).  Returns the same shape; only the interior
+    [r:-r, r:-r, r:-r] is stencil-defined (callers compare interior).
+    """
+    w = star_weights(r, src.dtype)
+    padded = jnp.pad(src, r, mode="edge")
+    nz, ny, nx = src.shape
+    out = jnp.zeros_like(src)
+    for k, (dz, dy, dx) in enumerate(star_offsets(r)):
+        sl = (
+            slice(r + dz, r + dz + nz),
+            slice(r + dy, r + dy + ny),
+            slice(r + dx, r + dx + nx),
+        )
+        out = out + w[k] * padded[sl]
+    return out

@@ -1,0 +1,1 @@
+from .ops import config_space, select_chunk, wkv, wkv_ref  # noqa: F401

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the RWKV6 WKV recurrence (stepwise scan).
+
+    wkv_t = S_{t-1} + diag(u) k_t v_t^T ;  out_t = r_t · wkv_t
+    S_t   = diag(exp(wlog_t)) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, wlog, u, s0=None):
+    """r,k,v,wlog: (BH, S, K) fp32; u: (K,); s0: (BH, K, K). Returns (out, s)."""
+    BH, S, K = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((BH, K, K), jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (BH, K)
+        kv = k_t[:, :, None] * v_t[:, None, :]
+        out = jnp.einsum("bk,bkv->bv", r_t, s + u[None, :, None] * kv)
+        s_new = jnp.exp(w_t)[:, :, None] * s + kv
+        return s_new, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, wlog))
+    s_final, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1), s_final

@@ -1,0 +1,256 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh ((16,16) single-pod or (2,16,16) multi-pod),
+  2. builds the model + step function (train_step for train shapes, forward for
+     prefill, serve/decode_step for decode shapes) with full sharding trees,
+  3. ``jax.jit(...).lower(**input_specs).compile()`` — proving the distribution
+     config is coherent: sharding mismatches, compile-time OOM or unsupported
+     collectives fail here,
+  4. records memory_analysis / cost_analysis / the collective schedule parsed
+     from the optimized HLO into results/dryrun/<mesh>/<arch>__<shape>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--variant baseline]
+(--all spawns one subprocess per cell for memory isolation on the 1-core host.)
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def run_cell(arch_id: str, shape_id: str, mesh_kind: str, variant: str, out_dir: str):
+    import jax
+
+    from ..configs import get_arch, input_specs, shape_applicable
+    from ..configs.base import SHAPES
+    from ..core.hlo_analysis import analyze_hlo, cost_analysis_scalars
+    from ..core.machine import MULTI_POD_MESH, SINGLE_POD_MESH
+    from ..core.roofline import build_report, model_flops_lm
+    from ..models.params import param_structs
+    from ..models.registry import build_model
+    from ..optim.optimizers import make_optimizer
+    from ..train.step import (
+        make_decode_step,
+        make_prefill_step,
+        make_train_step,
+        opt_state_pspecs,
+    )
+    from .mesh import make_production_mesh
+    from .variants import apply_variant
+
+    arch = get_arch(arch_id)
+    shape = SHAPES[shape_id]
+    ok, why = shape_applicable(arch, shape)
+    result = {
+        "arch": arch_id,
+        "shape": shape_id,
+        "mesh": mesh_kind,
+        "variant": variant,
+        "status": "skipped" if not ok else "pending",
+        "skip_reason": why,
+    }
+    if not ok:
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    mesh_spec = MULTI_POD_MESH if mesh_kind == "multi" else SINGLE_POD_MESH
+    arch, variant_notes = apply_variant(arch, variant)
+    model = build_model(arch)
+    import jax.numpy as jnp
+
+    pdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[arch.param_dtype]
+    opt_name = "adafactor" if arch.moe is not None else "adamw"
+    optimizer = make_optimizer(opt_name)
+    specs = input_specs(arch, shape)
+
+    t0 = time.time()
+    with mesh:
+        if shape.is_train:
+            bundle = make_train_step(model, optimizer, mesh, shape)
+            p_structs = param_structs(model.blueprint(), pdt)
+            o_structs = jax.eval_shape(optimizer.init, p_structs)
+            args = (p_structs, o_structs, specs)
+        elif shape.kind == "prefill":
+            bundle = make_prefill_step(model, mesh, shape)
+            args = (param_structs(model.blueprint(), pdt), specs)
+        else:  # decode
+            bundle = make_decode_step(model, mesh, shape)
+            p_structs = param_structs(model.blueprint(), pdt)
+            cache_structs = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            args = (p_structs, cache_structs, specs["tokens"])
+        jitted = bundle.jit(mesh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost_raw = cost_analysis_scalars(compiled.cost_analysis())
+    hlo = compiled.as_text()
+    hrep = analyze_hlo(hlo, default_group=1)
+    # trip-count-corrected terms (XLA cost_analysis visits loop bodies once)
+    cost = {
+        "flops": hrep.flops,
+        "bytes accessed": hrep.bytes,
+        "transcendentals": cost_raw.get("transcendentals", 0.0),
+    }
+    coll = hrep.collectives
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = model_flops_lm(
+        arch.n_params(),
+        tokens,
+        training=shape.is_train,
+        n_active_params=arch.n_active_params(),
+    )
+    report = build_report(
+        cell=f"{arch_id}/{shape_id}/{mesh_kind}",
+        mesh=mesh_spec,
+        cost=cost,
+        collectives=coll,
+        model_flops=mf,
+        dtype_bits=16,
+        notes=variant_notes,
+    )
+    result.update(
+        status="ok",
+        seconds_lower=round(t_lower, 2),
+        seconds_compile=round(t_compile, 2),
+        memory_analysis={
+            k: getattr(mem, k)
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        },
+        cost_analysis_raw={
+            k: cost_raw[k]
+            for k in sorted(cost_raw)
+            if k in ("flops", "bytes accessed", "transcendentals")
+        },
+        cost_analysis_corrected=dict(cost, n_while=hrep.n_while,
+                                     loop_multipliers=hrep.multipliers),
+        collectives={
+            "counts": coll.counts(),
+            "wire_bytes_by_kind": coll.by_kind(),
+            "wire_bytes_by_group_size": {
+                str(k): v for k, v in coll.wire_bytes_by_group_size().items()
+            },
+            "total_wire_bytes_per_device": coll.total_wire_bytes,
+        },
+        roofline=report.to_dict(),
+    )
+    return result
+
+
+CELL_TIMEOUT_S = 2400
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        from ..configs import ARCH_IDS
+        from ..configs.base import SHAPES
+
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        for mesh_kind in meshes:
+            for arch_id in ARCH_IDS:
+                for shape_id in SHAPES:
+                    out_path = os.path.join(
+                        args.out,
+                        mesh_kind,
+                        f"{arch_id}__{shape_id}__{args.variant}.json",
+                    )
+                    if os.path.exists(out_path) and not args.force:
+                        print(f"skip (exists) {out_path}")
+                        continue
+                    cmd = [
+                        sys.executable,
+                        "-m",
+                        "repro.launch.dryrun",
+                        "--arch",
+                        arch_id,
+                        "--shape",
+                        shape_id,
+                        "--mesh",
+                        mesh_kind,
+                        "--variant",
+                        args.variant,
+                        "--out",
+                        args.out,
+                    ]
+                    print(f"=== {mesh_kind}/{arch_id}/{shape_id} ===", flush=True)
+                    try:
+                        subprocess.run(cmd, check=False, timeout=CELL_TIMEOUT_S)
+                    except subprocess.TimeoutExpired:
+                        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+                        with open(out_path, "w") as f:
+                            json.dump(
+                                {
+                                    "arch": arch_id,
+                                    "shape": shape_id,
+                                    "mesh": mesh_kind,
+                                    "variant": args.variant,
+                                    "status": "timeout",
+                                },
+                                f,
+                                indent=2,
+                            )
+        return
+
+    assert args.arch and args.shape and args.mesh in ("single", "multi")
+    out_path = os.path.join(
+        args.out, args.mesh, f"{args.arch}__{args.shape}__{args.variant}.json"
+    )
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    try:
+        result = run_cell(args.arch, args.shape, args.mesh, args.variant, args.out)
+    except Exception as e:  # record the failure — it is a bug to fix
+        result = {
+            "arch": args.arch,
+            "shape": args.shape,
+            "mesh": args.mesh,
+            "variant": args.variant,
+            "status": "error",
+            "error": repr(e),
+            "traceback": traceback.format_exc(),
+        }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    status = result["status"]
+    print(f"[{status}] {args.arch}/{args.shape}/{args.mesh} -> {out_path}")
+    if status == "ok":
+        r = result["roofline"]
+        print(
+            f"  compute={r['t_compute_s']:.4e}s memory={r['t_memory_s']:.4e}s "
+            f"collective={r['t_collective_s']:.4e}s dominant={r['dominant']} "
+            f"roofline_frac={r['roofline_fraction']:.3f}"
+        )
+    elif status == "error":
+        print(result["traceback"][-2000:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Dry-run/perf variants: named configuration deltas for the §Perf hillclimb.
+
+``baseline`` is the paper-faithful configuration.  Each other variant is one
+hypothesis from EXPERIMENTS.md §Perf; `apply_variant` returns the modified arch
+config plus a note recorded in the cell JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..configs.base import ArchConfig
+
+
+def apply_variant(arch: ArchConfig, variant: str) -> tuple[ArchConfig, str]:
+    if variant == "baseline":
+        return arch, "baseline"
+    if variant == "no_remat":
+        return dataclasses.replace(arch, remat=False), "remat disabled (memory/compute trade)"
+    if variant == "attn_chunk_512":
+        return dataclasses.replace(arch, attn_chunk=512), "attention q-chunk 512"
+    if variant == "attn_chunk_2048":
+        return dataclasses.replace(arch, attn_chunk=2048), "attention q-chunk 2048"
+    if variant == "pad_heads":
+        # pad query heads up to a multiple of 16 so TP never splits a head
+        H = arch.n_heads
+        Ht = ((H + 15) // 16) * 16
+        return (
+            dataclasses.replace(arch, n_heads=Ht),
+            f"heads padded {H}->{Ht} for clean TP (beyond-paper)",
+        )
+    if variant == "moe_cf1":
+        assert arch.moe is not None
+        return (
+            dataclasses.replace(
+                arch, moe=dataclasses.replace(arch.moe, capacity_factor=1.0)
+            ),
+            "MoE capacity factor 1.0 (smaller dispatch tensors)",
+        )
+    if variant == "fp32_params_bf16_all":
+        return (
+            dataclasses.replace(arch, param_dtype="bfloat16"),
+            "bf16 parameters (halves FSDP all-gather volume)",
+        )
+    if variant == "rwkv_chunked":
+        return (
+            dataclasses.replace(arch, rwkv_chunk=16),
+            "chunked WKV (L=16): removes per-timestep state round-trips (beyond-paper)",
+        )
+    if variant == "moe_group4k":
+        return (
+            dataclasses.replace(arch, moe_group=4096),
+            "MoE routing in 4096-token groups: dispatch cost /(S/4096) (beyond-paper)",
+        )
+    if variant == "pad_heads_sp":
+        H = arch.n_heads
+        Ht = ((H + 15) // 16) * 16
+        return (
+            dataclasses.replace(arch, n_heads=Ht),
+            f"heads {H}->{Ht} for clean TP + activation constraints engage (beyond-paper)",
+        )
+    if variant == "moe_ep_group4k":
+        return (
+            dataclasses.replace(arch, moe_group=4096, moe_ep=True),
+            "EP expert sharding over 'model' + 4096-token routing groups",
+        )
+    if variant == "rwkv_chunked64":
+        return (
+            dataclasses.replace(arch, rwkv_chunk=64),
+            "chunked WKV (L=64)",
+        )
+    if variant == "pad_heads_bf16":
+        H = arch.n_heads
+        Ht = ((H + 15) // 16) * 16
+        return (
+            dataclasses.replace(arch, n_heads=Ht, param_dtype="bfloat16"),
+            f"heads {H}->{Ht} + bf16 params (halved FSDP gathers)",
+        )
+    if variant.startswith("microbatch"):
+        n = int(variant.removeprefix("microbatch"))
+        return (
+            dataclasses.replace(arch, microbatch=n),
+            f"gradient accumulation over {n} microbatches (temp memory /{n})",
+        )
+    raise ValueError(f"unknown variant {variant!r}")

@@ -1,0 +1,11 @@
+from .params import (  # noqa: F401
+    MULTI_POD_RULES,
+    SINGLE_POD_RULES,
+    ParamDef,
+    ShardingRules,
+    init_params,
+    param_count,
+    param_pspecs,
+    param_structs,
+)
+from .registry import LM, build_model  # noqa: F401

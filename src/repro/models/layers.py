@@ -1,0 +1,329 @@
+"""Shared neural-net layers (pure JAX): norms, RoPE, GQA attention (dense and
+memory-lean chunked paths), MLPs, MoE with GShard-style capacity dispatch."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from .params import ParamDef
+from .shardctx import constrain
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+
+
+def rmsnorm(x, weight=None, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        y = y * weight.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm(x, weight=None, bias=None, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        y = y * weight.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_defs(cfg: ArchConfig) -> dict:
+    if cfg.norm == "nonparametric_ln":  # olmo: LN without scale/bias
+        return {}
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamDef((cfg.d_model,), (None,), "ones"),
+            "bias": ParamDef((cfg.d_model,), (None,), "zeros"),
+        }
+    return {"scale": ParamDef((cfg.d_model,), (None,), "ones")}
+
+
+def apply_norm(cfg: ArchConfig, p: dict, x):
+    if cfg.norm == "nonparametric_ln":
+        return layernorm(x)
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention
+# --------------------------------------------------------------------------- #
+
+
+def attention_defs(cfg: ArchConfig) -> dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    defs = {
+        "wq": ParamDef((d, H * hd), ("fsdp", "tp")),
+        "wk": ParamDef((d, Hkv * hd), ("fsdp", "tp")),
+        "wv": ParamDef((d, Hkv * hd), ("fsdp", "tp")),
+        "wo": ParamDef((H * hd, d), ("tp", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H * hd,), ("tp",), "zeros")
+        defs["bk"] = ParamDef((Hkv * hd,), ("tp",), "zeros")
+        defs["bv"] = ParamDef((Hkv * hd,), ("tp",), "zeros")
+    return defs
+
+
+def _gqa_scores_chunk(q, k, scale):
+    """q: (B, C, Hkv, G, hd); k: (B, T, Hkv, hd) -> (B, Hkv, G, C, T) fp32."""
+    return jnp.einsum(
+        "bchgd,bthd->bhgct",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+
+
+def attention(
+    q,  # (B, S, H, hd)
+    k,  # (B, T, Hkv, hd)
+    v,  # (B, T, Hkv, hd)
+    causal: bool = True,
+    q_offset: int = 0,
+    chunk: int = 1024,
+):
+    """GQA attention; memory-lean q-chunked online-softmax when S is large.
+
+    This is the reference/XLA path (the Pallas flash kernel in
+    repro.kernels.attention is the TPU-target hot path; the dry-run and CPU tests
+    lower this one).
+    """
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, S, Hkv, G, hd)
+    if S <= chunk:
+        scores = _gqa_scores_chunk(qg, k, scale)  # (B, Hkv, G, S, T)
+        if causal:
+            qpos = q_offset + jnp.arange(S)[:, None]
+            kpos = jnp.arange(T)[None, :]
+            scores = jnp.where(qpos >= kpos, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v)
+        return out.reshape(B, S, H, hd)
+
+    n_chunks = S // chunk
+    assert S % chunk == 0, f"seq {S} not divisible by attn chunk {chunk}"
+    qc = qg.reshape(B, n_chunks, chunk, Hkv, G, hd)
+
+    def one_chunk(ci):
+        qi = qc[:, ci]
+        scores = _gqa_scores_chunk(qi, k, scale)  # (B, Hkv, G, C, T)
+        if causal:
+            qpos = q_offset + ci * chunk + jnp.arange(chunk)[:, None]
+            kpos = jnp.arange(T)[None, :]
+            scores = jnp.where(qpos >= kpos, scores, -1e30)
+        # probs cast to the compute dtype immediately: the (C, T) matrices are the
+        # dominant live buffers in the backward pass (EXPERIMENTS.md §Perf iter 0)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhgct,bthd->bchgd", probs, v)
+
+    # checkpoint each q-chunk: only one chunk's score matrix is ever live
+    out = jax.lax.map(jax.checkpoint(one_chunk), jnp.arange(n_chunks))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+    return out
+
+
+def attention_block(
+    cfg: ArchConfig,
+    p: dict,
+    x,  # (B, S, d)
+    positions,  # (B, S)
+    kv_cache: Optional[dict] = None,  # {"k": (B, T, Hkv, hd), "v": ..., "len": int}
+    causal: bool = True,
+):
+    """Full attention sub-block: qkv -> rope -> attention -> out-proj.
+
+    Returns (out, new_kv_cache)."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cdt = x.dtype
+    q = constrain((x @ p["wq"].astype(cdt)).reshape(B, S, H, hd), ("dp", None, "tp", None))
+    k = constrain((x @ p["wk"].astype(cdt)).reshape(B, S, Hkv, hd), ("dp", None, "tp", None))
+    v = constrain((x @ p["wv"].astype(cdt)).reshape(B, S, Hkv, hd), ("dp", None, "tp", None))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt).reshape(H, hd)
+        k = k + p["bk"].astype(cdt).reshape(Hkv, hd)
+        v = v + p["bv"].astype(cdt).reshape(Hkv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if kv_cache is not None:
+        T = kv_cache["k"].shape[1]
+        idx = kv_cache["len"]
+        ck = jax.lax.dynamic_update_slice(kv_cache["k"], k.astype(cdt), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(kv_cache["v"], v.astype(cdt), (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv, "len": idx + S}
+        # causal mask with q positions offset by the cache length also masks the
+        # not-yet-written cache slots (kpos > idx + s)
+        out = _cached_attention(q, ck, cv, idx, cfg.attn_chunk)
+    else:
+        out = attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    y = out.reshape(B, S, H * hd) @ p["wo"].astype(cdt)
+    return constrain(y, ("dp", None, None)), new_cache
+
+
+def _cached_attention(q, ck, cv, cache_len, chunk):
+    """Decode/cached attention: q positions start at cache_len; keys beyond
+    cache_len + S are masked."""
+    B, S, H, hd = q.shape
+    T, Hkv = ck.shape[1], ck.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, S, Hkv, G, hd)
+    scores = _gqa_scores_chunk(qg, ck, scale)  # (B, Hkv, G, S, T)
+    qpos = cache_len + jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    scores = jnp.where(qpos >= kpos, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs.astype(cv.dtype), cv)
+    return out.reshape(B, S, H, hd)
+
+
+# --------------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------------- #
+
+
+def mlp_defs(cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": ParamDef((d, ff), ("fsdp", "tp")),
+            "w_up": ParamDef((d, ff), ("fsdp", "tp")),
+            "w_down": ParamDef((ff, d), ("tp", "fsdp")),
+        }
+    return {
+        "w_in": ParamDef((d, ff), ("fsdp", "tp")),
+        "w_down": ParamDef((ff, d), ("tp", "fsdp")),
+    }
+
+
+def mlp(cfg: ArchConfig, p: dict, x):
+    cdt = x.dtype
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(cdt)) * (x @ p["w_up"].astype(cdt))
+        h = constrain(h, ("dp", None, "tp"))
+        return constrain(h @ p["w_down"].astype(cdt), ("dp", None, None))
+    h = constrain(jax.nn.gelu(x @ p["w_in"].astype(cdt)), ("dp", None, "tp"))
+    return constrain(h @ p["w_down"].astype(cdt), ("dp", None, None))
+
+
+# --------------------------------------------------------------------------- #
+# MoE (GShard-style top-k capacity routing, dense one-hot dispatch)
+# --------------------------------------------------------------------------- #
+
+
+def moe_defs(cfg: ArchConfig) -> dict:
+    assert cfg.moe is not None
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    defs = {"router": ParamDef((d, E), (None, None), scale=0.1)}
+    if cfg.mlp == "swiglu":
+        defs.update(
+            w_gate=ParamDef((E, d, ff), ("ep", "fsdp", "tp")),
+            w_up=ParamDef((E, d, ff), ("ep", "fsdp", "tp")),
+            w_down=ParamDef((E, ff, d), ("ep", "tp", "fsdp")),
+        )
+    else:
+        defs.update(
+            w_in=ParamDef((E, d, ff), ("ep", "fsdp", "tp")),
+            w_down=ParamDef((E, ff, d), ("ep", "tp", "fsdp")),
+        )
+    return defs
+
+
+def moe_block(cfg: ArchConfig, p: dict, x):
+    """Top-k routed MoE with per-sequence expert capacity.
+
+    Dispatch/combine are dense one-hot einsums (GShard): they shard cleanly over
+    (dp, ep/tp) and lower to all-to-all-free einsums the partitioner can schedule.
+
+    ``cfg.moe_group > 0`` routes in fixed-size token groups along the sequence:
+    capacity C scales with the group instead of the whole sequence, cutting the
+    dispatch-einsum cost by S/group (§Perf dbrx iteration).
+    Returns (out, aux_loss)."""
+    assert cfg.moe is not None
+    B, S, d = x.shape
+    G = cfg.moe_group
+    if G and S > G and S % G == 0:
+        xg = x.reshape(B * (S // G), G, d)
+        yg, aux = _moe_routed(cfg, p, xg)
+        return yg.reshape(B, S, d), aux
+    return _moe_routed(cfg, p, x)
+
+
+def _moe_routed(cfg: ArchConfig, p: dict, x):
+    B, S, d = x.shape
+    E, K = cfg.moe.n_experts, cfg.moe.top_k
+    C = max(1, int(S * K * cfg.moe.capacity_factor / E))
+    cdt = x.dtype
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (B,S,K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # load-balance auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))
+    one_hot_k = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (B,S,K,E)
+    fe = one_hot_k.sum(2).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * fe)
+    # position of each (token, k) within its expert
+    flat_assign = one_hot_k  # (B,S,K,E)
+    # cumulative count over (S, K) per expert
+    cum = jnp.cumsum(flat_assign.reshape(B, S * K, E), axis=1).reshape(B, S, K, E)
+    pos = (cum - flat_assign) * flat_assign  # (B,S,K,E): pos within expert
+    pos = pos.sum(-1)  # (B,S,K)
+    expert_sel = flat_assign  # alias
+    keep = (pos < C).astype(jnp.float32)
+    gate_vals = gate_vals * keep
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    # dispatch tensor (B, S, E, C)
+    dispatch = jnp.einsum("bske,bskc->bsec", expert_sel, pos_oh).astype(cdt)
+    combine = jnp.einsum(
+        "bsk,bske,bskc->bsec", gate_vals, expert_sel, pos_oh
+    ).astype(jnp.float32)
+    xe = constrain(
+        jnp.einsum("bsec,bsd->becd", dispatch, x), ("dp", "ep", None, None)
+    )  # (B, E, C, d)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["w_gate"].astype(cdt)))
+        h = h * jnp.einsum("becd,edf->becf", xe, p["w_up"].astype(cdt))
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xe, p["w_in"].astype(cdt)))
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(cdt))
+    y = jnp.einsum("bsec,becd->bsd", combine, ye.astype(jnp.float32))
+    return constrain(y.astype(cdt), ("dp", None, None)), aux

@@ -1,0 +1,158 @@
+"""Mamba2 (SSD) block — chunked parallel scan, pure JAX.
+
+State-space recurrence per head h (scalar decay a_t, state (N, P)):
+    h_t = a_t * h_{t-1} + B_t ⊗ (dt_t * x_t)        (outer product, N x P)
+    y_t = C_t · h_t + D * x_t
+with a_t = exp(-dt_t * exp(A_log_h)), dt_t = softplus(dt_raw + dt_bias).
+
+The chunked algorithm splits the sequence into chunks of L steps: within a chunk
+the contribution is an (L, L) decay-masked matmul; across chunks a short
+`lax.scan` propagates the (H, N, P) state.  Scalar per-head decay makes the decay
+matrix exp(la_t - la_s) directly computable — no factorization overflow
+(DESIGN.md §2; this is the TPU-friendly formulation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from .params import ParamDef
+
+CONV_WIDTH = 4
+
+
+def mamba2_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in = 2 * d
+    N = cfg.ssm_state
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    conv_ch = d_in + 2 * N
+    return {
+        "in_proj": ParamDef((d, 2 * d_in + 2 * N + H), ("fsdp", "tp")),
+        "conv_w": ParamDef((CONV_WIDTH, conv_ch), (None, "tp"), "small_normal", 0.5),
+        "conv_b": ParamDef((conv_ch,), ("tp",), "zeros"),
+        "A_log": ParamDef((H,), (None,), "zeros"),
+        "D": ParamDef((H,), (None,), "ones"),
+        "dt_bias": ParamDef((H,), (None,), "zeros"),
+        "norm_scale": ParamDef((d_in,), ("tp",), "ones"),
+        "out_proj": ParamDef((d_in, d), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv, width CONV_WIDTH. x: (B,S,C); w: (W,C).
+
+    ``state``: (B, W-1, C) previous inputs for streaming decode; returns
+    (y, new_state)."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), x.dtype)
+    xe = jnp.concatenate([state, x], axis=1)  # (B, S+W-1, C)
+    y = sum(xe[:, i : i + S, :] * w[i][None, None, :] for i in range(W))
+    new_state = xe[:, -(W - 1) :, :]
+    return jax.nn.silu(y + b[None, None, :]), new_state
+
+
+def _ssd_chunked(xh, a_log, B_, C_, h0, chunk: int):
+    """Chunked SSD scan.
+
+    xh:    (B, S, H, P)  dt-scaled inputs
+    a_log: (B, S, H)     log decay per step (<= 0)
+    B_:    (B, S, N)     input projection (shared across heads, n_groups=1)
+    C_:    (B, S, N)     output projection
+    h0:    (B, H, N, P)  initial state
+    Returns (y (B,S,H,P), h_final).
+    """
+    B, S, H, P = xh.shape
+    N = B_.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, f"seq {S} not divisible by ssm chunk {L}"
+    nc = S // L
+    xc = xh.reshape(B, nc, L, H, P)
+    ac = a_log.reshape(B, nc, L, H)
+    Bc = B_.reshape(B, nc, L, N)
+    Cc = C_.reshape(B, nc, L, N)
+    la = jnp.cumsum(ac, axis=2)  # (B,nc,L,H) cumulative log decay within chunk
+    # intra-chunk: y_intra[t] = sum_{s<=t} exp(la_t - la_s) (C_t·B_s) xh_s
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]  # (B,nc,L_t,L_s,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    # mask the exponent (not the exp): exp(+big) on masked entries would be inf,
+    # and inf * 0 cotangents poison the backward pass
+    seg = jnp.where(tri[None, None, :, :, None], seg, -60.0)
+    decay = jnp.exp(seg)
+    smat = jnp.einsum("bctn,bcsn->bcts", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    w = decay * smat[..., None]  # (B,nc,Lt,Ls,H)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", w, xc.astype(jnp.float32))
+    # chunk summaries: state injected by chunk c = sum_s exp(la_end - la_s) B_s xh_s
+    tail = jnp.exp(la[:, :, -1:, :] - la)  # (B,nc,L,H)
+    inj = jnp.einsum("bcsn,bcsh,bcshp->bchnp", Bc.astype(jnp.float32), tail, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(la[:, :, -1, :])  # (B,nc,H)
+
+    def step(h, inputs):
+        inj_c, dec_c = inputs  # (B,H,N,P), (B,H)
+        h_new = h * dec_c[:, :, None, None] + inj_c
+        return h_new, h
+
+    (h_final, h_starts) = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (jnp.moveaxis(inj, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_starts = jnp.moveaxis(h_starts, 0, 1)  # (B,nc,H,N,P) state at chunk start
+    # inter-chunk: y_inter[t] = C_t · (exp(la_t) * h_start)
+    y_inter = jnp.einsum(
+        "bctn,bcth,bchnp->bcthp", Cc.astype(jnp.float32), jnp.exp(la), h_starts
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, h_final
+
+
+def mamba2_block(cfg: ArchConfig, p: dict, x, state=None, chunk: int = 64):
+    """x: (B, S, d).  ``state``: {"h": (B,H,N,P), "conv": (B,3,C)} for decode.
+
+    Returns (out, new_state)."""
+    B, S, d = x.shape
+    d_in = 2 * d
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    H = d_in // P
+    cdt = x.dtype
+    z_xBC_dt = x @ p["in_proj"].astype(cdt)
+    z, xs, B_, C_, dt_raw = jnp.split(
+        z_xBC_dt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, B_, C_], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(
+        conv_in, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt), conv_state
+    )
+    xs, B_, C_ = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a_log = -dt * jnp.exp(p["A_log"].astype(jnp.float32))  # (B,S,H)
+    xh = xs.reshape(B, S, H, P)
+    xh_dt = xh.astype(jnp.float32) * dt[..., None]
+    h0 = (
+        state["h"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, H, N, P), jnp.float32)
+    )
+    if S == 1:  # decode: single recurrence step
+        a = jnp.exp(a_log[:, 0])  # (B,H)
+        inj = jnp.einsum("bn,bhp->bhnp", B_[:, 0].astype(jnp.float32), xh_dt[:, 0])
+        h_new = h0 * a[:, :, None, None] + inj
+        y = jnp.einsum("bn,bhnp->bhp", C_[:, 0].astype(jnp.float32), h_new)[:, None]
+        h_final = h_new
+    else:
+        y, h_final = _ssd_chunked(xh_dt, a_log, B_, C_, h0, chunk)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(cdt)
+    y = y * jax.nn.silu(z)
+    from .layers import rmsnorm
+
+    y = rmsnorm(y, p["norm_scale"])
+    out = y @ p["out_proj"].astype(cdt)
+    new_state = {"h": h_final.astype(jnp.float32), "conv": new_conv}
+    return out, new_state

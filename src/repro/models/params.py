@@ -1,0 +1,112 @@
+"""Parameter blueprints: shapes + logical sharding specs declared once.
+
+Models build a pytree of :class:`ParamDef`; materialization (`init_params`),
+shape-only evaluation (`param_structs`, for the dry-run) and sharding extraction
+(`param_pspecs`) all derive from the same blueprint, so layouts can never drift.
+
+Logical axis names used in specs:
+  * ``fsdp``  — ZeRO-3 style parameter sharding axis (maps to ('pod','data') / ('data',))
+  * ``tp``    — tensor-parallel axis (maps to 'model')
+  * ``dp``    — batch axis for activations (maps to ('pod','data'))
+  * ``sp``    — sequence-parallel axis (maps to 'model' on long-context shapes)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    spec: tuple  # logical PartitionSpec entries, len == ndim
+    init: str = "normal"  # normal | zeros | ones | small_normal
+    scale: float = 1.0
+
+    def materialize(self, key, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan_in = self.shape[0] if self.shape else 1
+        std = self.scale / np.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, self.shape)).astype(dtype)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical -> physical mesh-axis translation."""
+
+    fsdp: tuple[str, ...] | str | None = ("data",)
+    tp: tuple[str, ...] | str | None = "model"
+    dp: tuple[str, ...] | str | None = ("data",)
+    sp: tuple[str, ...] | str | None = None  # sequence parallel (long context)
+    ep: tuple[str, ...] | str | None = None  # expert parallel (hillclimb variant)
+
+    def translate(self, logical: tuple) -> P:
+        out = []
+        used: set[str] = set()
+        for ax in logical:
+            phys = getattr(self, ax) if ax is not None else None
+            if phys is None:
+                out.append(None)
+                continue
+            names = (phys,) if isinstance(phys, str) else tuple(phys)
+            free = tuple(n for n in names if n not in used)
+            used.update(free)
+            if not free:
+                out.append(None)  # a mesh axis can shard only one dim
+            elif len(free) == 1:
+                out.append(free[0])
+            else:
+                out.append(free)
+        return P(*out)
+
+
+SINGLE_POD_RULES = ShardingRules(fsdp=("data",), tp="model", dp=("data",))
+MULTI_POD_RULES = ShardingRules(
+    fsdp=("pod", "data"), tp="model", dp=("pod", "data")
+)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, rng_key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(rng_key, len(leaves))
+    vals = [d.materialize(k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_structs(defs, dtype=jnp.float32):
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def
+    )
+
+
+def param_pspecs(defs, rules: ShardingRules):
+    return jax.tree.map(lambda d: rules.translate(d.spec), defs, is_leaf=is_def)
+
+
+def param_count(defs) -> int:
+    return sum(
+        int(np.prod(d.shape)) for d in jax.tree.leaves(defs, is_leaf=is_def)
+    )
+
+
+def stack_defs(d: ParamDef, n: int) -> ParamDef:
+    """Add a leading layer dimension (for scan-over-layers stacked params)."""
+    return dataclasses.replace(d, shape=(n, *d.shape), spec=(None, *d.spec))
+
+
+def stack_blueprint(defs, n_layers: int):
+    return jax.tree.map(lambda d: stack_defs(d, n_layers), defs, is_leaf=is_def)

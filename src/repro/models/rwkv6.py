@@ -1,0 +1,206 @@
+"""RWKV6 "Finch" block — data-dependent per-channel decay, pure JAX.
+
+Time mixing (per head, K = V = head dim):
+    wkv_t = S_{t-1} + diag(u) k_t v_t^T          (bonus on the current token)
+    out_t = r_t · wkv_t
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T        (w_t = exp(-exp(wlog_t)))
+with w_t data-dependent via a low-rank projection (Finch).  The recurrence runs
+as a `lax.scan` over time (the HLO stays compact; a chunked/Pallas variant is a
+§Perf item).  Channel mixing is the standard RWKV squared-relu MLP.  Token shift
+(mixing with the previous token) is a causal roll.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .params import ParamDef
+
+DECAY_LORA = 64
+
+
+def rwkv6_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "tm": {
+            "mu_r": ParamDef((d,), (None,), "zeros"),
+            "mu_k": ParamDef((d,), (None,), "zeros"),
+            "mu_v": ParamDef((d,), (None,), "zeros"),
+            "mu_g": ParamDef((d,), (None,), "zeros"),
+            "mu_w": ParamDef((d,), (None,), "zeros"),
+            "wr": ParamDef((d, d), ("fsdp", "tp")),
+            "wk": ParamDef((d, d), ("fsdp", "tp")),
+            "wv": ParamDef((d, d), ("fsdp", "tp")),
+            "wg": ParamDef((d, d), ("fsdp", "tp")),
+            "wo": ParamDef((d, d), ("tp", "fsdp")),
+            "w_lora_a": ParamDef((d, DECAY_LORA), ("fsdp", None)),
+            "w_lora_b": ParamDef((DECAY_LORA, d), (None, "tp")),
+            "w_base": ParamDef((d,), ("tp",), "zeros"),
+            # nonzero bonus init: keeps the first-token wkv output away from zero,
+            # where the post-scan rmsnorm would blow up gradients (1/rms -> 1e3)
+            "u_bonus": ParamDef((d,), ("tp",), "normal", 8.0),
+            "ln_scale": ParamDef((d,), (None,), "ones"),
+        },
+        "cm": {
+            "mu_k": ParamDef((d,), (None,), "zeros"),
+            "w_in": ParamDef((d, cfg.d_ff), ("fsdp", "tp")),
+            "w_out": ParamDef((cfg.d_ff, d), ("tp", "fsdp")),
+        },
+        "ln1": ParamDef((d,), (None,), "ones"),
+        "ln2": ParamDef((d,), (None,), "ones"),
+    }
+
+
+def _token_shift(x, prev=None):
+    """x_{t-1} per position; ``prev`` (B, 1, d) carries across decode steps."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, wlog, u, s0):
+    """r,k,v: (B,S,H,K); wlog: (B,S,H,K) (log decay <= 0); u: (H,K).
+
+    Returns (out (B,S,H,K), s_final (B,H,K,K))."""
+    B, S, H, K = r.shape
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,K) each
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,K,K)
+        wkv = s + u[None, :, :, None] * kv
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, wkv)
+        s_new = jnp.exp(w_t)[..., None] * s + kv
+        return s_new, out
+
+    xs = tuple(
+        jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, wlog)
+    )
+    s_final, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1), s_final
+
+
+def _wkv_chunked(r, k, v, wlog, u, s0, chunk: int = 16):
+    """Chunked WKV: O(S/L) sequential steps instead of O(S).
+
+    Within a chunk of L steps the intra-chunk contribution is computed with an
+    exact (L, L, K) decay tensor D[t,s,k] = exp(Λ_{t-1} - Λ_s) (s <= t-1; the
+    exponent is always <= 0, so no factorization overflow — DESIGN.md §2);
+    across chunks a short scan propagates the (H, K, V) state.  This is the
+    §Perf "beyond-paper" optimization for the rwkv6 cells: it removes the
+    per-timestep state materialization that made the naive scan HBM-bound.
+    """
+    B, S, H, K = r.shape
+    L = min(chunk, S)
+    assert S % L == 0, f"seq {S} not divisible by wkv chunk {L}"
+    nc = S // L
+
+    def cshape(a):
+        return a.astype(jnp.float32).reshape(B, nc, L, H, K)
+
+    rc, kc, vc, wc = cshape(r), cshape(k), cshape(v), cshape(wlog)
+    lam = jnp.cumsum(wc, axis=2)  # Λ_t, t = 1..L
+    lam_prev = jnp.pad(lam[:, :, :-1], ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))
+    # D[t, s] = exp(Λ_{t-1} - Λ_s), strictly-lower-triangular mask
+    seg = lam_prev[:, :, :, None] - lam[:, :, None, :]  # (B,nc,Lt,Ls,H,K)
+    tri = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    seg = jnp.where(tri[None, None, :, :, None, None], seg, -60.0)
+    D = jnp.exp(seg)
+    # intra-chunk attention-like weights A[t,s] = sum_k r_t D[t,s] k_s
+    A = jnp.einsum("bcthk,bctshk,bcshk->bctsh", rc, D, kc)
+    out = jnp.einsum("bctsh,bcshv->bcthv", A, vc)
+    # current-token bonus: (r_t · (u ⊙ k_t)) v_t
+    bonus = jnp.einsum("bcthk,hk,bcthk->bcth", rc, u, kc)
+    out = out + bonus[..., None] * vc
+    # chunk state injection and decay
+    tail = jnp.exp(lam[:, :, -1:, :, :] - lam)  # exp(Λ_L - Λ_s)
+    inj = jnp.einsum("bcshk,bcshv->bchkv", kc * tail, vc)
+    cdecay = jnp.exp(lam[:, :, -1])  # (B,nc,H,K)
+
+    def step(s, inp):
+        inj_c, dec_c = inp  # (B,H,K,V), (B,H,K)
+        return s * dec_c[..., None] + inj_c, s
+
+    s_final, s_starts = jax.lax.scan(
+        step,
+        s0.astype(jnp.float32),
+        (jnp.moveaxis(inj, 1, 0), jnp.moveaxis(cdecay, 1, 0)),
+    )
+    s_starts = jnp.moveaxis(s_starts, 0, 1)  # (B,nc,H,K,V) state at chunk start
+    # inter-chunk: out_t += (r_t ⊙ exp(Λ_{t-1})) · S_start
+    out = out + jnp.einsum("bcthk,bchkv->bcthv", rc * jnp.exp(lam_prev), s_starts)
+    return out.reshape(B, S, H, K), s_final
+
+
+def rwkv6_block(cfg: ArchConfig, p: dict, x, state=None):
+    """x: (B,S,d). state: {"shift_tm","shift_cm": (B,1,d), "s": (B,H,K,K)}.
+
+    Returns (out, new_state)."""
+    B, S, d = x.shape
+    K = cfg.rwkv_head_dim
+    H = d // K
+    cdt = x.dtype
+    tm, cm = p["tm"], p["cm"]
+    from .layers import layernorm, rmsnorm
+
+    xa = layernorm(x, p["ln1"])
+    prev_tm = state["shift_tm"] if state is not None else None
+    xs = _token_shift(xa, prev_tm)
+
+    def mix(mu):
+        return xa + (xs - xa) * mu.astype(cdt)[None, None, :]
+
+    r = (mix(tm["mu_r"]) @ tm["wr"].astype(cdt)).reshape(B, S, H, K)
+    k = (mix(tm["mu_k"]) @ tm["wk"].astype(cdt)).reshape(B, S, H, K)
+    v = (mix(tm["mu_v"]) @ tm["wv"].astype(cdt)).reshape(B, S, H, K)
+    g = jax.nn.silu(mix(tm["mu_g"]) @ tm["wg"].astype(cdt))
+    wx = mix(tm["mu_w"]).astype(jnp.float32)
+    wlora = jnp.tanh(wx @ tm["w_lora_a"].astype(jnp.float32)) @ tm["w_lora_b"].astype(
+        jnp.float32
+    )
+    # data-dependent decay: w = exp(-exp(w_base + lora)), clamped for stability
+    wlog = -jnp.exp(jnp.clip(tm["w_base"].astype(jnp.float32) + wlora, -8.0, 4.0))
+    wlog = wlog.reshape(B, S, H, K)
+    u = tm["u_bonus"].astype(jnp.float32).reshape(H, K)
+    s0 = (
+        state["s"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, H, K, K), jnp.float32)
+    )
+    chunk = getattr(cfg, "rwkv_chunk", 0)
+    if chunk and S > 1 and S % chunk == 0:
+        out, s_final = _wkv_chunked(
+            r.astype(jnp.float32),
+            k.astype(jnp.float32),
+            v.astype(jnp.float32),
+            wlog,
+            u,
+            s0,
+            chunk,
+        )
+    else:
+        out, s_final = _wkv_scan(
+            r.astype(jnp.float32),
+            k.astype(jnp.float32),
+            v.astype(jnp.float32),
+            wlog,
+            u,
+            s0,
+        )
+    out = out.reshape(B, S, d)
+    out = rmsnorm(out.astype(cdt), tm["ln_scale"]) * g
+    y_tm = out @ tm["wo"].astype(cdt)
+
+    x2 = x + y_tm
+    xb = layernorm(x2, p["ln2"])
+    prev_cm = state["shift_cm"] if state is not None else None
+    xs2 = _token_shift(xb, prev_cm)
+    xk = xb + (xs2 - xb) * cm["mu_k"].astype(cdt)[None, None, :]
+    h = jnp.square(jax.nn.relu(xk @ cm["w_in"].astype(cdt)))
+    y_cm = h @ cm["w_out"].astype(cdt)
+    new_state = {
+        "shift_tm": xa[:, -1:, :],
+        "shift_cm": xb[:, -1:, :],
+        "s": s_final,
+    }
+    return y_tm + y_cm, new_state

@@ -1,0 +1,67 @@
+"""Activation-sharding context: logical constraints inside model code.
+
+Without constraints, GSPMD resolves the FSDP-sharded weight contraction
+(x @ W[P('data','model')]) by *replicating activations over the data axis* —
+every data-rank then computes the full global batch through attention
+(EXPERIMENTS.md §Perf, olmo iteration 1).  `constrain()` pins the batch axis to
+dp and head/ff axes to tp at block boundaries, turning the resolution into the
+intended ZeRO-3 weight all-gather instead.
+
+The context is set by the step factories (train/step.py) around tracing; model
+code calls `constrain(x, ("dp", None, None))` with logical axis names.  Dims
+that don't divide their mesh axes are silently left unconstrained (e.g. 40
+query heads on a 16-wide tp axis).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .params import ShardingRules
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("shard_ctx", default=None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(rules: ShardingRules, axis_sizes: dict[str, int]):
+    token = _CTX.set((rules, axis_sizes))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def _axes_size(axes, sizes: dict[str, int]) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def constrain(x, logical: tuple):
+    """Apply with_sharding_constraint for logical axes, where divisible."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    rules, sizes = ctx
+    entries = []
+    for dim, ax in zip(x.shape, logical):
+        if ax is None:
+            entries.append(None)
+            continue
+        phys = getattr(rules, ax, None)
+        if phys is None or dim % _axes_size(phys, sizes) != 0:
+            entries.append(None)
+        else:
+            entries.append(phys)
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*entries))

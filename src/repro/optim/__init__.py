@@ -1,0 +1,9 @@
+from .optimizers import (  # noqa: F401
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    make_optimizer,
+    wsd_schedule,
+)

@@ -1,0 +1,170 @@
+"""Optimizers (pure JAX, no optax offline): AdamW and Adafactor.
+
+AdamW keeps fp32 m/v with the same sharding as the parameters (ZeRO-style: the
+param blueprint's fsdp/tp specs carry over to the moments, so optimizer state is
+fully sharded).  Adafactor factors the second moment for >=2D tensors — the
+memory-sane choice for the 100B+ MoE configs (see configs/grok_1_314b.py).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def wsd_schedule(
+    step,
+    peak_lr: float = 3e-4,
+    warmup: int = 100,
+    hold: int = 10000,
+    decay: int = 10000,
+    floor: float = 0.1,
+):
+    """Warmup-stable-decay schedule."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * jnp.minimum(1.0, (step + 1) / warmup)
+    frac = jnp.clip((step - warmup - hold) / decay, 0.0, 1.0)
+    dec = peak_lr * (1.0 - (1.0 - floor) * frac)
+    return jnp.minimum(warm, dec)
+
+
+# --------------------------------------------------------------------------- #
+# AdamW
+# --------------------------------------------------------------------------- #
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads,
+    state,
+    params,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**c
+    bc2 = 1.0 - b2**c
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        update = update + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * update
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+# --------------------------------------------------------------------------- #
+# Adafactor (factored second moment; memory O(rows + cols) for matrices)
+# --------------------------------------------------------------------------- #
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def state_for(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row moments
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {
+        "v": jax.tree.map(state_for, params, is_leaf=lambda x: hasattr(x, "shape")),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(
+    grads,
+    state,
+    params,
+    lr,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+):
+    count = state["count"] + 1
+
+    def upd(g, s, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p.shape):
+            vr = decay * s["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * s["vc"] + (1 - decay) * g2.mean(axis=-2)
+            denom = vr.mean(axis=-1, keepdims=True)[..., None]
+            vhat = vr[..., None] * vc[..., None, :] / jnp.maximum(denom, eps)
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            vhat = decay * s["v"] + (1 - decay) * g2
+            new_s = {"v": vhat}
+        u = g / jnp.sqrt(vhat + eps)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        p_new = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), new_s
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["v"])
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_v = tdef.unflatten([o[1] for o in out])
+    return new_p, {"v": new_v, "count": count}
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (params, state)
+
+
+def make_optimizer(name: str = "adamw", **kw) -> Optimizer:
+    if name == "adamw":
+        return Optimizer(
+            "adamw", adamw_init, functools.partial(adamw_update, **kw)
+        )
+    if name == "adafactor":
+        return Optimizer(
+            "adafactor", adafactor_init, functools.partial(adafactor_update, **kw)
+        )
+    raise ValueError(name)

@@ -1,0 +1,112 @@
+"""Sharding policy: map logical specs onto a concrete mesh per (arch x shape).
+
+Parameters carry logical specs from the blueprint (fsdp/tp); activations, batches,
+KV caches and SSM states are assigned here, with divisibility-aware fallbacks
+(e.g. long_500k has global_batch=1 -> the cache shards over sequence instead of
+batch; heads shard over 'model' only when divisible).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.params import ShardingRules
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def rules_for_mesh(mesh: Mesh) -> ShardingRules:
+    names = mesh.axis_names
+    if "pod" in names:
+        return ShardingRules(fsdp=("pod", "data"), tp="model", dp=("pod", "data"))
+    return ShardingRules(fsdp=("data",), tp="model", dp=("data",))
+
+
+def _maybe(dim: int, axes, mesh: Mesh):
+    """Use ``axes`` for this dim only if it divides evenly; else replicate."""
+    if axes is None:
+        return None
+    return axes if dim % axis_size(mesh, axes) == 0 else None
+
+
+def batch_pspecs(
+    arch: ArchConfig, shape: ShapeConfig, mesh: Mesh, rules: ShardingRules
+) -> dict[str, P]:
+    B = shape.global_batch
+    dp = _maybe(B, rules.dp, mesh)
+    specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if arch.frontend != "none":
+        specs["frontend_embeds"] = P(dp, None, None)
+    return specs
+
+
+def cache_pspecs(
+    arch: ArchConfig, shape: ShapeConfig, mesh: Mesh, rules: ShardingRules
+) -> Any:
+    """PartitionSpec tree matching model.init_cache output."""
+    B = shape.global_batch
+    dp = _maybe(B, rules.dp, mesh)
+    tp = rules.tp
+    # if batch can't use the dp axes, shard the long sequence dim over 'data'
+    seq_axes = None if dp is not None else ("data",)
+    if arch.family == "ssm":
+        d = arch.d_model
+        H = d // arch.rwkv_head_dim
+        h_ax = _maybe(H, tp, mesh)
+        return {
+            "shift_tm": P(None, dp, None, None),
+            "shift_cm": P(None, dp, None, None),
+            "s": P(None, dp, h_ax, None, None),
+        }
+    def kv_layout():
+        """Prefer head-sharding over tp; fall back to sequence-sharding over tp
+        (flash-decode style) so the cache never replicates over 'model'."""
+        kv_ax = _maybe(arch.n_kv_heads, tp, mesh)
+        s_ax = seq_axes
+        if kv_ax is None and s_ax is None and shape.seq_len % axis_size(mesh, tp) == 0:
+            s_ax = tp
+        return s_ax, kv_ax
+
+    if arch.family == "hybrid":
+        d_in = 2 * arch.d_model
+        H = d_in // arch.ssm_head_dim
+        h_ax = _maybe(H, tp, mesh)
+        s_ax, kv_ax = kv_layout()
+        mamba = {
+            "h": P(None, dp, h_ax, None, None),
+            "conv": P(None, dp, None, None),
+        }
+        attn = {
+            "k": P(None, dp, s_ax, kv_ax, None),
+            "v": P(None, dp, s_ax, kv_ax, None),
+            "len": P(None),
+        }
+        return (mamba, attn)
+    s_ax, kv_ax = kv_layout()
+    return {
+        "k": P(None, dp, s_ax, kv_ax, None),
+        "v": P(None, dp, s_ax, kv_ax, None),
+        "len": P(None),
+    }
+
+
+def to_shardings(mesh: Mesh, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,72 @@
+"""Capacity-miss model, sigmoid fitting, multi-limiter model invariants."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import appspec, estimator, model
+from repro.core.capacity import (
+    DEFAULT_FITS,
+    CapacityModel,
+    OverlapMissModel,
+    Sigmoid,
+    fit_sigmoid,
+)
+from repro.core.machine import V100, GPUMachine
+
+
+@settings(max_examples=50, deadline=None)
+@given(o=st.floats(0.0, 100.0))
+def test_capacity_model_bounds(o):
+    for m in (DEFAULT_FITS.l1, DEFAULT_FITS.l2_load, DEFAULT_FITS.l2_store):
+        r = m(o)
+        assert 0.0 <= r <= 1.0
+    assert DEFAULT_FITS.l1(0.5) == 0.0  # fits in cache -> no capacity misses
+
+
+@settings(max_examples=50, deadline=None)
+@given(c=st.floats(-5.0, 5.0))
+def test_overlap_model_bounds_and_monotone(c):
+    m = DEFAULT_FITS.overmiss
+    assert 0.0 <= m(c) <= 1.0
+    assert m(c) >= m(c + 0.5) - 1e-12  # more coverage -> fewer misses
+
+
+def test_capacity_monotone_in_oversubscription():
+    m = DEFAULT_FITS.l1
+    xs = np.linspace(1.0, 20.0, 50)
+    ys = [m(x) for x in xs]
+    assert all(b >= a - 1e-12 for a, b in zip(ys, ys[1:]))
+
+
+def test_fit_sigmoid_recovers():
+    true = Sigmoid(a=0.9, b=12.0, c=1.5)
+    x = np.linspace(0.2, 8.0, 40)
+    y = true(x)
+    fit = fit_sigmoid(x, y)
+    err = np.abs(fit(x) - y).max()
+    assert err < 0.05, (fit, err)
+
+
+def test_prediction_terms_positive_and_limiter():
+    spec = appspec.star3d(block=(16, 2, 32))
+    est = estimator.estimate(spec, method="sym")
+    pred = model.predict(spec, est)
+    assert pred.time == max(pred.terms.values()) > 0
+    assert pred.limiter in pred.terms
+    # faster machine -> faster prediction
+    import dataclasses
+    fast = dataclasses.replace(V100, bw_dram=2 * V100.bw_dram, bw_l2=2 * V100.bw_l2)
+    est2 = estimator.estimate(spec, fast, method="sym")
+    pred2 = model.predict(spec, est2, fast)
+    assert pred2.glups >= pred.glups
+
+
+def test_estimate_store_volume_floor():
+    """Stores are written exactly once per LUP minimum (8B/LUP for the stencil)."""
+    spec = appspec.star3d(block=(32, 4, 8))
+    est = estimator.estimate(spec, method="sym")
+    assert est.v_dram_store >= 8.0 - 1e-6
+    assert est.v_l2l1_load >= est.v_l2l1_load_comp

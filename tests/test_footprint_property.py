@@ -1,0 +1,99 @@
+"""Property tests: the symbolic (mini-ISL) footprint method must agree EXACTLY
+with direct enumeration on arbitrary affine accesses (paper §III.D.1 vs §III.D.2),
+plus structural invariants of footprints."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import footprint as fe
+from repro.core import symset as fs
+from repro.core.address import Access, Field, ThreadBox
+
+fields = st.builds(
+    Field,
+    name=st.sampled_from(["A", "B"]),
+    shape=st.tuples(
+        st.integers(8, 64), st.integers(2, 16), st.integers(2, 8)
+    ),
+    element_size=st.sampled_from([4, 8]),
+    alignment=st.sampled_from([0, 32, 64]),
+)
+
+
+@st.composite
+def access_strategy(draw):
+    f = draw(fields)
+    sx, sy, sz = f.strides
+    # unit-stride x (the common generated-code case) or strided fallback
+    cx = draw(st.sampled_from([1, 1, 1, 2, -1]))
+    cy = draw(st.sampled_from([sy, 2 * sy, 0]))
+    cz = draw(st.sampled_from([sz, 2 * sz, 0]))
+    off = draw(st.integers(-3, 3)) * sx + draw(st.integers(-2, 2)) * sy
+    return Access(f, coeffs=(cx, cy, cz), offset=off)
+
+
+boxes = st.builds(
+    ThreadBox,
+    x=st.tuples(st.integers(0, 4), st.integers(5, 40)),
+    y=st.tuples(st.integers(0, 3), st.integers(4, 12)),
+    z=st.tuples(st.integers(0, 2), st.integers(3, 8)),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    accesses=st.lists(access_strategy(), min_size=1, max_size=6),
+    box=boxes,
+    granularity=st.sampled_from([32, 128]),
+)
+def test_symbolic_equals_enumeration(accesses, box, granularity):
+    a = fe.footprint_bytes(accesses, [box], granularity)
+    b = fs.footprint_bytes(accesses, [box], granularity)
+    assert a == b
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    accesses=st.lists(access_strategy(), min_size=1, max_size=4),
+    box=boxes,
+)
+def test_footprint_granularity_monotone(accesses, box):
+    """Coarser lines can only cover >= the bytes of finer lines' unique set /
+    fine footprint is <= coarse footprint in *line count* terms inverted —
+    check byte bounds: footprint(128) >= footprint(32) / 4 and both positive."""
+    f32 = fe.footprint_bytes(accesses, [box], 32)
+    f128 = fe.footprint_bytes(accesses, [box], 128)
+    assert f128 >= f32 / 4
+    assert f128 <= 4 * f32  # each 32B sector lies in exactly one 128B line
+    assert f32 > 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    accesses=st.lists(access_strategy(), min_size=1, max_size=4),
+    box=boxes,
+)
+def test_overlap_bounds(accesses, box):
+    """|A ∩ B| <= min(|A|, |B|); self-overlap == footprint."""
+    g = 32
+    sets_e = fe.line_sets(accesses, [box], g)
+    self_overlap = fe.overlap_bytes(sets_e, sets_e, g)
+    assert self_overlap == fe.footprint_bytes(accesses, [box], g)
+    sets_s = fs.field_interval_sets(accesses, [box], g)
+    assert fs.overlap_bytes(sets_s, sets_s, g) == self_overlap
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    accesses=st.lists(access_strategy(), min_size=1, max_size=4),
+    box=boxes,
+)
+def test_requested_at_least_compulsory(accesses, box):
+    """V_up >= V_comp (redundant volume is non-negative, paper Eq. 2)."""
+    loads = [a for a in accesses]
+    v_up = fe.warp_requested_bytes(loads, box, 32, stores=None)
+    v_comp = fe.footprint_bytes(loads, [box], 32)
+    assert v_up >= v_comp

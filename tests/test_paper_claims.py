@@ -1,0 +1,136 @@
+"""Validation against the paper's own §IV claims (V100 machine model).
+
+No GPU is available, so the "measured" side is (a) the paper's published numbers
+as reference constants and (b) the deterministic LRU cache simulation
+(core/exactcount.py) standing in for performance counters — see DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import appspec, estimator, exactcount, model, ranking
+from repro.core.machine import V100
+
+
+@pytest.fixture(scope="module")
+def stencil_ranked():
+    return ranking.rank_configs(
+        lambda block, fold: appspec.star3d(block=block, fold=fold),
+        appspec.stencil_config_space(),
+        method="sym",
+    )
+
+
+@pytest.fixture(scope="module")
+def lbm_ranked():
+    return ranking.rank_configs(
+        lambda block, fold: appspec.lbm_d3q15(block=block, fold=fold),
+        appspec.lbm_config_space(),
+        method="sym",
+    )
+
+
+def test_config_space_size():
+    # paper §IV.B: 162 stencil configurations; LBM register-limited to 512 threads
+    assert len(appspec.stencil_config_space()) == 162
+    assert len(appspec.lbm_config_space()) == 49
+
+
+def test_stencil_arithmetic_intensity_memory_bound():
+    # paper §IV.C: AI = 1.5 Flop/B << machine balance 4 Flop/B
+    spec = appspec.star3d(block=(16, 2, 32))
+    ai = spec.flops_per_lup / 16.0  # 8B load + 8B store per LUP minimum
+    assert ai < V100.machine_balance_fp64
+
+
+def test_best_predicted_stencil_class(stencil_ranked):
+    """Paper: best configs are 'moderate-x, small-y, deep-z/cube-ish'; worst are
+    x=1 tall-y blocks.  The model must put (16,2,32)-class blocks near the top and
+    (1,512,2)-class at the bottom."""
+    best = stencil_ranked[0]
+    bx, by, bz = best.config["block"]
+    assert bx >= 8 and by <= 16 and bz >= 8, f"unexpected winner {best.config}"
+    worst = stencil_ranked[-1]
+    assert worst.config["block"][0] <= 2, f"unexpected loser {worst.config}"
+    # measured-best from the paper, (32,2,16)+fold, must rank in the top 15%
+    for i, r in enumerate(stencil_ranked):
+        if r.config["block"] == (32, 2, 16) and r.config["fold"] != (1, 1, 1):
+            assert i < len(stencil_ranked) * 0.15, f"paper's winner ranked {i}"
+            break
+    else:
+        pytest.fail("paper's measured-best block not in space")
+
+
+def test_paper_prediction_magnitude(stencil_ranked):
+    """(16,2,32) no-fold predicted ~27.6 GLup/s in the paper (86% of 31.9);
+    our faithful re-implementation must land in the same band (+-30%)."""
+    for r in stencil_ranked:
+        if r.config["block"] == (16, 2, 32) and r.config["fold"] == (1, 1, 1):
+            assert 0.7 * 27.6 < r.prediction.glups < 1.3 * 27.6, r.prediction.glups
+            assert r.prediction.limiter == "DRAM"  # paper: DRAM-bound at the top
+            return
+    pytest.fail("(16,2,32) not in config space")
+
+
+def test_stencil_limiter_distribution(stencil_ranked):
+    """Paper §IV.H: DRAM limits the fast configs; L2 appears for flat blocks; L1
+    only for very small x."""
+    best_limiters = {r.prediction.limiter for r in stencil_ranked[:20]}
+    assert best_limiters == {"DRAM"}
+    l1_limited = [r for r in stencil_ranked if r.prediction.limiter == "L1"]
+    assert l1_limited and all(r.config["block"][0] <= 4 for r in l1_limited)
+
+
+def test_lbm_worst_is_short_x(lbm_ranked):
+    """Paper §IV.H: the model correctly identifies the worst LBM configs =
+    short-x blocks (partial cache line loads)."""
+    worst = lbm_ranked[-5:]
+    assert all(r.config["block"][0] <= 2 for r in worst), [
+        r.config for r in worst
+    ]
+    assert lbm_ranked[0].config["block"][0] >= 16
+
+
+def test_lbm_performance_ceiling(lbm_ranked):
+    """240 B/LUP streaming floor => <= 3.3 GLup/s; paper Fig 18 shows ~1-2."""
+    best = lbm_ranked[0].prediction.glups
+    assert 0.8 < best <= 790 / 240 + 0.1, best
+
+
+def test_estimator_matches_cache_simulation_rankwise():
+    """Estimated DRAM volumes must rank-correlate with the LRU cache simulation
+    (the measurement stand-in) across a spread of configs."""
+    cfgs = [
+        {"block": (512, 2, 1), "fold": (1, 1, 1)},
+        {"block": (128, 8, 1), "fold": (1, 1, 1)},
+        {"block": (32, 32, 1), "fold": (1, 1, 1)},
+        {"block": (16, 8, 8), "fold": (1, 1, 1)},
+        {"block": (8, 4, 32), "fold": (1, 1, 1)},
+        {"block": (2, 512, 1), "fold": (1, 1, 1)},
+        {"block": (16, 2, 32), "fold": (1, 1, 1)},
+    ]
+    grid = (256, 128, 128)  # reduced grid keeps the simulation fast
+    est_v, sim_v = [], []
+    for c in cfgs:
+        spec = appspec.star3d(block=c["block"], fold=c["fold"], grid=grid)
+        est = estimator.estimate(spec, method="sym")
+        sim = exactcount.simulate(spec)
+        est_v.append(est.v_dram_load)
+        sim_v.append(sim.v_dram_load)
+    rho = ranking.spearman_rho(est_v, sim_v)
+    assert rho > 0.7, (rho, est_v, sim_v)
+
+
+def test_l1_cycles_match_paper_fig5():
+    """Fig 5: width>=16 -> 1 cycle per load per half-warp (no conflicts);
+    width 1 -> every load serialises over one bank (16x)."""
+    from repro.core.bankconflict import l1_cycles_per_lup
+
+    wide = appspec.star3d(block=(32, 4, 8))
+    narrow = appspec.star3d(block=(1, 32, 32))
+    c_wide = l1_cycles_per_lup(wide)
+    c_narrow = l1_cycles_per_lup(narrow)
+    # 25 loads, each 1 cycle per half-warp over 16 lups -> 25*2/32 cycles/lup
+    assert abs(c_wide - 25 * 2 / 32) < 0.2, c_wide
+    assert c_narrow > 8 * c_wide, (c_narrow, c_wide)

@@ -1,0 +1,60 @@
+"""IntervalSet algebra property tests (the mini-ISL layer): union / intersect /
+cardinality must match plain python set semantics on random interval soups."""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.symset import IntervalSet
+
+intervals = st.lists(
+    st.tuples(st.integers(-50, 50), st.integers(1, 20)).map(
+        lambda se: (se[0], se[0] + se[1])
+    ),
+    min_size=0,
+    max_size=12,
+)
+
+
+def as_set(pairs) -> set[int]:
+    out: set[int] = set()
+    for a, b in pairs:
+        out.update(range(a, b))
+    return out
+
+
+def mk(pairs) -> IntervalSet:
+    if not pairs:
+        return IntervalSet.empty()
+    s = np.asarray([p[0] for p in pairs], np.int64)
+    e = np.asarray([p[1] for p in pairs], np.int64)
+    return IntervalSet(s, e)
+
+
+@settings(max_examples=120, deadline=None)
+@given(a=intervals)
+def test_cardinality_matches_set(a):
+    assert mk(a).cardinality == len(as_set(a))
+
+
+@settings(max_examples=120, deadline=None)
+@given(a=intervals)
+def test_merge_is_disjoint_sorted(a):
+    iv = mk(a)
+    assert (iv.starts[1:] > iv.ends[:-1]).all() if iv.starts.size > 1 else True
+    assert (iv.ends > iv.starts).all() if iv.starts.size else True
+
+
+@settings(max_examples=120, deadline=None)
+@given(a=intervals, b=intervals)
+def test_intersect_matches_set(a, b):
+    got = mk(a).intersect(mk(b)).cardinality
+    assert got == len(as_set(a) & as_set(b))
+
+
+@settings(max_examples=120, deadline=None)
+@given(a=intervals, b=intervals)
+def test_union_matches_set(a, b):
+    got = mk(a).union(mk(b)).cardinality
+    assert got == len(as_set(a) | as_set(b))

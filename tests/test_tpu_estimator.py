@@ -1,0 +1,86 @@
+"""TPU/Pallas estimator: revisit-rule exactness, VMEM gate, ranking sanity."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import tpu_estimator as te
+from repro.core.machine import TPU_V5E
+
+
+def _matmul_cfg(M, N, K, bm, bn, bk, bits=16):
+    return te.PallasConfig(
+        name=f"mm{bm}x{bn}x{bk}",
+        grid=(M // bm, N // bn, K // bk),
+        accesses=(
+            te.BlockAccess("A", (bm, bk), lambda i, j, k: (i, k), bits),
+            te.BlockAccess("B", (bk, bn), lambda i, j, k: (k, j), bits),
+            te.BlockAccess("O", (bm, bn), lambda i, j, k: (i, j), bits, True),
+        ),
+        flops_per_step=2.0 * bm * bn * bk,
+    )
+
+
+def test_matmul_fetch_counts_exact():
+    """Pallas revisit rule: A refetches whenever (i,k) changes -> with k innermost,
+    A fetches = gi*gj*gk; B same; O unique = gi*gj."""
+    M = N = K = 1024
+    bm = bn = bk = 256
+    cfg = _matmul_cfg(M, N, K, bm, bn, bk)
+    est = te.estimate(cfg)
+    g = 4
+    dA = est.detail["A"]
+    dB = est.detail["B"]
+    dO = est.detail["O"]
+    assert dA["fetches"] == g * g * g
+    assert dA["unique_blocks"] == g * g
+    assert dB["fetches"] == g * g * g
+    assert dO["unique_blocks"] == g * g
+    assert est.hbm_redundant > 0
+
+
+def test_vmem_gate():
+    cfg = _matmul_cfg(8192, 8192, 8192, 8192, 8192, 8192, bits=32)
+    est = te.estimate(cfg)
+    assert not est.feasible
+    with pytest.raises(ValueError):
+        te.select_config([cfg])
+
+
+def test_ranking_prefers_feasible_and_fast():
+    cands = [
+        _matmul_cfg(4096, 4096, 4096, b, b, b)
+        for b in (128, 256, 512, 1024)
+    ]
+    ranked = te.rank_configs(cands)
+    assert ranked[0][1].feasible
+    times = [e.time for _, e in ranked]
+    assert times == sorted(times)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.sampled_from([128, 256, 512]),
+    bits=st.sampled_from([8, 16, 32]),
+)
+def test_invariants(b, bits):
+    cfg = _matmul_cfg(2048, 2048, 2048, b, b, b, bits)
+    est = te.estimate(cfg)
+    assert est.hbm_compulsory <= est.hbm_bytes + 1e-9
+    assert 0 < est.layout_efficiency <= 1.0
+    assert est.vmem_bytes > 0
+
+
+def test_layout_efficiency_penalizes_ragged_lanes():
+    good = te.PallasConfig(
+        "good", (4,), (te.BlockAccess("x", (8, 128), lambda i: (i, 0), 32),), 0.0
+    )
+    bad = te.PallasConfig(
+        "bad", (4,), (te.BlockAccess("x", (8, 100), lambda i: (i, 0), 32),), 0.0
+    )
+    eg = te.estimate(good)
+    eb = te.estimate(bad)
+    assert eg.layout_efficiency == 1.0
+    assert eb.layout_efficiency < 0.9

@@ -1,0 +1,85 @@
+"""End-to-end Trainer: fault injection -> restore -> resume; straggler counting;
+1-device mesh with full sharding machinery engaged."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import SyntheticTokenDataset
+from repro.launch.mesh import make_test_mesh
+from repro.models import build_model
+from repro.optim.optimizers import make_optimizer
+from repro.train.trainer import Trainer, TrainerConfig
+
+import jax
+
+
+def _mk(tmp_path, fault_hook=None, ckpt_every=3):
+    cfg = get_arch("olmo-1b").smoke()
+    model = build_model(cfg)
+    mesh = make_test_mesh(1, 1)
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    tcfg = TrainerConfig(
+        ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=ckpt_every, peak_lr=1e-3
+    )
+    tr = Trainer(model, make_optimizer("adamw"), mesh, shape, tcfg, fault_hook)
+    ds = SyntheticTokenDataset(cfg.vocab, 32, 4, seed=3)
+    return tr, ds
+
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    tr, ds = _mk(tmp_path)
+    state = tr.fit(jax.random.PRNGKey(0), ds, n_steps=7)
+    steps = [e for e in tr.log if e["event"] == "step"]
+    assert len(steps) == 7
+    from repro.checkpoint.manager import latest_step
+    assert latest_step(tr.tcfg.ckpt_dir) == 7
+    assert np.isfinite(steps[-1]["loss"])
+
+
+def test_trainer_fault_recovery(tmp_path):
+    calls = {"n": 0}
+
+    def fault_hook(step):
+        if step == 5 and calls["n"] == 0:
+            calls["n"] += 1
+            raise RuntimeError("injected node failure")
+
+    tr, ds = _mk(tmp_path, fault_hook)
+    tr.fit(jax.random.PRNGKey(0), ds, n_steps=8)
+    assert tr.restarts == 1
+    events = [e["event"] for e in tr.log]
+    assert "restart" in events
+    # resumed from the last checkpoint (step 3) and completed
+    steps = [e["step"] for e in tr.log if e["event"] == "step"]
+    assert steps[-1] == 7
+    assert steps.count(4) == 2  # step 4 re-ran after restore from ckpt@3
+
+
+def test_trainer_gives_up_after_max_retries(tmp_path):
+    def always_fail(step):
+        raise RuntimeError("persistent failure")
+
+    tr, ds = _mk(tmp_path, always_fail)
+    tr.tcfg.max_retries = 2
+    with pytest.raises(RuntimeError, match="giving up"):
+        tr.fit(jax.random.PRNGKey(0), ds, n_steps=4)
+
+
+def test_serving_engine(tmp_path):
+    from repro.models import init_params
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_arch("olmo-1b").smoke()
+    model = build_model(cfg)
+    params = init_params(model.blueprint(), jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, max_len=64)
+    prompts = np.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], np.int32)
+    out = eng.generate(prompts, n_steps=6, temperature=0.0)
+    assert out.shape == (2, 6)
+    assert (out >= 0).all() and (out < cfg.vocab).all()
+    # greedy decoding is deterministic
+    out2 = eng.generate(prompts, n_steps=6, temperature=0.0)
+    np.testing.assert_array_equal(out, out2)
