@@ -55,14 +55,10 @@ def fig5_l1_cycles():
 
 
 def fig17_stencil_ranking():
-    from repro.core import appspec, ranking
+    from repro.explore import sweep
 
     def run():
-        return ranking.rank_configs(
-            lambda block, fold: appspec.star3d(block=block, fold=fold),
-            appspec.stencil_config_space(),
-            method="sym",
-        )
+        return sweep("stencil25", method="sym").ranked
 
     us, ranked = _timed(run)
     best = ranked[0]
@@ -75,14 +71,10 @@ def fig17_stencil_ranking():
 
 
 def fig18_lbm_ranking():
-    from repro.core import appspec, ranking
+    from repro.explore import sweep
 
     def run():
-        return ranking.rank_configs(
-            lambda block, fold: appspec.lbm_d3q15(block=block, fold=fold),
-            appspec.lbm_config_space(),
-            method="sym",
-        )
+        return sweep("lbm_d3q15", method="sym").ranked
 
     us, ranked = _timed(run)
     best, worst = ranked[0], ranked[-1]
@@ -226,6 +218,25 @@ def tpu_wkv_ranking():
     )
 
 
+def explore_cached_sweep():
+    """Throughput of the exploration engine: cold sweep (process pool) vs warm
+    re-sweep from the persistent store — the subsystem's headline speedup."""
+    import tempfile
+
+    from repro.explore import sweep
+
+    with tempfile.TemporaryDirectory() as d:
+        store = os.path.join(d, "stencil25.jsonl")
+        us_cold, cold = _timed(sweep, "stencil25", store=store, workers=8)
+        us_warm, warm = _timed(sweep, "stencil25", store=store)
+    derived = (
+        f"configs={cold.stats.candidates} cold={us_cold/1e6:.1f}s "
+        f"warm={us_warm/1e6:.3f}s hits={warm.stats.cache_hits} "
+        f"speedup={us_cold/max(us_warm, 1):.0f}x pareto={len(warm.pareto())}"
+    )
+    return "explore_cached_sweep", us_warm, derived
+
+
 def dryrun_roofline_summary():
     t0 = time.perf_counter()
     cells = []
@@ -264,6 +275,7 @@ BENCHES = [
     tpu_stencil_ranking,
     tpu_attention_ranking,
     tpu_wkv_ranking,
+    explore_cached_sweep,
     dryrun_roofline_summary,
 ]
 

@@ -1,37 +1,48 @@
 """Estimator-guided "autotuning without benchmarking" (paper §I.A).
 
-Ranks the full stencil + LBM configuration spaces with the analytic estimator,
-then validates the top candidates against the deterministic cache simulation
-(the measurement stand-in) — the workflow [5] in the paper uses with real
-benchmarks, here fully offline.
+Sweeps the full stencil + LBM configuration spaces through the exploration
+engine (`repro.explore`): search-space DSL -> analytic pruning -> batched
+parallel estimation with a persistent, resumable result store -> Pareto
+ranking.  The top candidates are then validated against the deterministic
+cache simulation (the measurement stand-in) — the workflow [5] in the paper
+uses with real benchmarks, here fully offline.
+
+Re-running is incremental: every estimate is cached in
+results/explore/<kernel>__<machine>__sym.jsonl, so the second invocation
+reports all-cache-hits and finishes in milliseconds.
 
 Run: PYTHONPATH=src python examples/stencil_autotune.py
 """
-import time
+from repro.core import appspec, estimator, exactcount
+from repro.explore import sweep
+from repro.explore.store import ResultStore
 
-from repro.core import appspec, estimator, exactcount, model, ranking
-
-for app, space, build in (
-    ("stencil", appspec.stencil_config_space(), appspec.star3d),
-    ("lbm", appspec.lbm_config_space(), appspec.lbm_d3q15),
-):
-    t0 = time.time()
-    ranked = ranking.rank_configs(
-        lambda block, fold, b=build: b(block=block, fold=fold), space, method="sym"
+for kernel, build in (("stencil25", appspec.star3d), ("lbm_d3q15", appspec.lbm_d3q15)):
+    res = sweep(
+        kernel,
+        store=ResultStore.default_path(kernel, "V100", "sym"),
+        workers=4,
     )
-    dt = time.time() - t0
-    print(f"\n== {app}: ranked {len(space)} configs in {dt:.1f}s ==")
+    s = res.stats
+    print(
+        f"\n== {kernel}: swept {s.candidates} configs in {s.wall_s:.1f}s "
+        f"({s.cache_hits} cache hits, {s.evaluated} estimated) =="
+    )
     print("rank | block        | fold    | GLup/s | limiter | DRAM B/LUP")
-    for i, r in enumerate(ranked[:5]):
+    for i, r in enumerate(res.top(5)):
+        m = r.metrics
         print(
             f"{i:4d} | {str(r.config['block']):12s} | {str(r.config['fold']):7s} "
-            f"| {r.prediction.glups:6.1f} | {r.prediction.limiter:7s} "
-            f"| {r.estimate.v_dram:.1f}"
+            f"| {m['glups']:6.1f} | {m['limiter']:7s} | {m['v_dram']:.1f}"
         )
+    front = res.pareto()
+    print(f"pareto front (GLup/s max, DRAM min, occupancy max): {len(front)} configs")
     # validate top-3 estimated DRAM volumes against the cache simulation
     print("validating top-3 against the LRU cache simulation (reduced grid):")
-    for r in ranked[:3]:
-        spec = build(block=r.config["block"], fold=r.config["fold"], grid=(256, 128, 128))
+    for r in res.top(3):
+        spec = build(
+            block=r.config["block"], fold=r.config["fold"], grid=(256, 128, 128)
+        )
         est = estimator.estimate(spec, method="sym")
         sim = exactcount.simulate(spec)
         print(

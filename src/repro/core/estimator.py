@@ -11,6 +11,7 @@ with either the enumeration (§III.D.1) or the symbolic (§III.D.2) footprint me
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -45,7 +46,14 @@ class VolumeEstimate:
     flops: float = 0.0
     l1_oversubscription: float = 0.0
     l2_oversubscription: float = 0.0
+    # Mean wave-coverage factor C (paper Eq. 8), clamped to [.., 1]: C >= 1 means
+    # the previous wave's footprint fully fits in L2 beside the current one, so
+    # every value above 1 (including the no-previous-wave case, C = inf) carries
+    # the same meaning ("complete coverage, no overlap misses") and is reported
+    # as 1.0 to keep the average finite and comparable across launches.
     l2_coverage: float = 0.0
+    # blocks actually running concurrently: machine wave capacity clamped to the
+    # number of blocks the launch grid provides (sub-wave grids underfill SMs)
     wave_blocks: int = 0
     detail: dict = field(default_factory=dict)
 
@@ -114,7 +122,7 @@ def estimate(
 
     # ---- L2 / DRAM (collaborative group = wave of blocks, §III.G) -----------
     pairs = representative_waves(spec, machine)
-    est.wave_blocks = wave_size(spec, machine)
+    est.wave_blocks = min(wave_size(spec, machine), spec.launch.num_blocks)
     dram_load = dram_load_comp = dram_load_over = dram_load_cap = 0.0
     dram_store = 0.0
     o_l2_acc = cov_acc = 0.0
@@ -136,8 +144,12 @@ def estimate(
         alloc_sets_l2 = line_sets_fn(spec.accesses, curr_boxes, line, stores=None)
         v_alloc_l2 = _set_bytes(alloc_sets_l2, line, m)
         o_l2 = v_alloc_l2 / machine.l2_bytes
+        # coverage factor C (paper Eq. 8); no previous wave -> nothing to re-load
+        # from L2, which behaves like complete coverage -> C = +inf sentinel
         cov = (
-            (machine.l2_bytes - (v_curr - v_overlap)) / v_prev if v_prev else 1e9
+            (machine.l2_bytes - (v_curr - v_overlap)) / v_prev
+            if v_prev
+            else math.inf
         )
         r_over = fits.overmiss(cov) if v_prev else 0.0
         r_l2 = fits.l2_load(o_l2)
@@ -158,7 +170,7 @@ def estimate(
         v_red_store = max(0.0, v_up_l2_store - v_store_unique)
         dram_store += (v_store_unique + fits.l2_store(o_l2) * v_red_store) / wave_lups
         o_l2_acc += o_l2
-        cov_acc += min(cov, 1e9)
+        cov_acc += min(cov, 1.0)  # C > 1 is indistinguishable from C = 1 (see field doc)
     n = len(pairs)
     est.v_dram_load = dram_load / n
     est.v_dram_load_comp = dram_load_comp / n

@@ -1,7 +1,10 @@
-"""Configuration-space exploration and ranking (paper §I.A, §IV.H).
+"""Configuration ranking primitives (paper §I.A, §IV.H).
 
 The code generator enumerates candidate configurations; the estimator + model rank
-them, replacing the generate→compile→benchmark autotuning cycle.
+them, replacing the generate→compile→benchmark autotuning cycle.  The actual
+sweep machinery (search spaces, pruning, parallel batched estimation, persistent
+caching, Pareto ranking) lives in :mod:`repro.explore`; :func:`rank_configs`
+delegates there so the whole repo has one exploration path.
 """
 from __future__ import annotations
 
@@ -12,9 +15,9 @@ import numpy as np
 
 from .address import KernelSpec
 from .capacity import DEFAULT_FITS, CapacityFits
-from .estimator import VolumeEstimate, estimate
+from .estimator import VolumeEstimate
 from .machine import V100, GPUMachine
-from .model import Prediction, predict
+from .model import Prediction
 
 
 @dataclass
@@ -35,15 +38,18 @@ def rank_configs(
     fits: CapacityFits = DEFAULT_FITS,
     method: str = "sym",
 ) -> list[RankedConfig]:
-    """Estimate + predict every configuration; return sorted best-first."""
-    out: list[RankedConfig] = []
-    for cfg in configs:
-        spec = build(**cfg)
-        est = estimate(spec, machine, fits, method=method)
-        pred = predict(spec, est, machine)
-        out.append(RankedConfig(config=dict(cfg), estimate=est, prediction=pred))
-    out.sort(key=lambda r: -r.glups)
-    return out
+    """Estimate + predict every configuration; return sorted best-first.
+
+    Thin wrapper over :func:`repro.explore.engine.sweep` (serial, uncached) —
+    kept as the stable narrow API for callers that bring their own config list.
+    Pass a registry kernel name to ``sweep`` directly for caching, pruning and
+    process-pool parallelism.
+    """
+    from ..explore.engine import sweep  # local import: explore depends on core
+
+    return sweep(
+        build, configs=configs, machine=machine, fits=fits, method=method
+    ).ranked
 
 
 def top_k(ranked: Sequence[RankedConfig], k: int = 5) -> list[RankedConfig]:
@@ -71,6 +77,9 @@ def kendall_tau(a: Sequence[float], b: Sequence[float]) -> float:
 def spearman_rho(a: Sequence[float], b: Sequence[float]) -> float:
     a = np.asarray(a, dtype=np.float64)
     b = np.asarray(b, dtype=np.float64)
+    assert b.size == a.size
+    if a.size < 2:
+        return 1.0  # vacuous ordering, same convention as kendall_tau
     ra = np.argsort(np.argsort(a)).astype(np.float64)
     rb = np.argsort(np.argsort(b)).astype(np.float64)
     ra -= ra.mean()

@@ -1,0 +1,68 @@
+"""`repro.explore` — scalable configuration-space exploration (paper §I.A, §IV.H).
+
+The paper's headline capability is ranking large configuration spaces with an
+analytic estimator instead of compile-and-benchmark autotuning.  This package
+is the search layer that makes that fast at scale:
+
+* :mod:`repro.explore.space`    — declarative search-space DSL (axes + constraints),
+* :mod:`repro.explore.prune`    — cheap roofline/occupancy pre-filters,
+* :mod:`repro.explore.engine`   — batched parallel estimation with memoization,
+* :mod:`repro.explore.store`    — persistent, resumable JSONL result store,
+* :mod:`repro.explore.pareto`   — Pareto frontier + top-k selection,
+* :mod:`repro.explore.cli`      — ``python -m repro.explore --kernel stencil25 --top 5``.
+
+Quickstart::
+
+    from repro.explore import sweep
+    res = sweep("stencil25", store="results/explore/stencil.jsonl", workers=4)
+    best = res.top(5)           # best-first SweepRecords
+    frontier = res.pareto()     # non-dominated (GLUPs, DRAM B/LUP, occupancy)
+"""
+from .engine import SweepRecord, SweepResult, SweepStats, sweep
+from .pareto import GPU_OBJECTIVES, TPU_OBJECTIVES, pareto_front, top_k
+from .prune import prune_configs, upper_bound_glups
+from .registry import KERNELS, MACHINES, get_kernel, get_machine
+from .space import (
+    Axis,
+    Constraint,
+    SearchSpace,
+    choice,
+    divides_grid,
+    exact_volume,
+    irange,
+    max_volume,
+    multiple_of,
+    pow2,
+    predicate,
+)
+from .store import ResultStore, canonical_key
+
+__all__ = [
+    "Axis",
+    "Constraint",
+    "GPU_OBJECTIVES",
+    "KERNELS",
+    "MACHINES",
+    "ResultStore",
+    "SearchSpace",
+    "SweepRecord",
+    "SweepResult",
+    "SweepStats",
+    "TPU_OBJECTIVES",
+    "canonical_key",
+    "choice",
+    "divides_grid",
+    "exact_volume",
+    "get_kernel",
+    "get_machine",
+    "irange",
+    "max_volume",
+    "multiple_of",
+    "pareto_front",
+    "pow2",
+    "predicate",
+    "prune_configs",
+    "sweep",
+    "top_k",
+    "upper_bound_glups",
+]

@@ -1,0 +1,158 @@
+"""Command-line sweep driver: ``python -m repro.explore --kernel stencil25 --top 5``.
+
+Runs a full configuration-space sweep through the exploration engine, persists
+every estimate to a resumable JSONL store (re-invocations are incremental and
+report the cache-hit count), and prints the best-first ranking plus, on
+request, the Pareto frontier.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .engine import SweepResult, sweep
+from .registry import KERNELS, MACHINES, get_kernel
+from .store import ResultStore
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.explore",
+        description="Estimator-driven configuration-space exploration (no benchmarking).",
+    )
+    p.add_argument("--kernel", help="kernel to explore (see --list)")
+    p.add_argument("--list", action="store_true", help="list explorable kernels and exit")
+    p.add_argument("--machine", default=None, choices=sorted(MACHINES), help="machine model")
+    p.add_argument("--method", default="sym", choices=("sym", "enum"),
+                   help="footprint method (paper §III.D.2 symbolic vs §III.D.1 enumeration)")
+    p.add_argument("--top", type=int, default=5, help="print the best K configs")
+    p.add_argument("--store", default=None,
+                   help="result store path (default results/explore/<kernel>__<machine>__<method>.jsonl)")
+    p.add_argument("--no-store", action="store_true", help="disable the persistent cache")
+    p.add_argument("--workers", type=int, default=0,
+                   help="process-pool workers for cache misses (0 = serial)")
+    p.add_argument("--prune", action="store_true",
+                   help="analytic pre-pruning (roofline bound + launch sanity)")
+    p.add_argument("--keep-fraction", type=float, default=0.5,
+                   help="fraction of candidates surviving --prune")
+    p.add_argument("--sample", type=int, default=None,
+                   help="deterministic subsample of the space to N configs")
+    p.add_argument("--seed", type=int, default=0, help="sampling seed")
+    p.add_argument("--pareto", action="store_true", help="also print the Pareto frontier")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="machine-readable JSON summary instead of tables")
+    return p
+
+
+def _fmt_cfg(cfg: dict) -> str:
+    if "block" in cfg:
+        s = f"block={tuple(cfg['block'])}"
+        if tuple(cfg.get("fold", (1, 1, 1))) != (1, 1, 1):
+            s += f" fold={tuple(cfg['fold'])}"
+        return s
+    return cfg.get("name", str(cfg))
+
+
+def _print_gpu_rows(records) -> None:
+    print("rank | config                        | GLup/s | limiter | DRAM B/LUP | occ")
+    for i, r in enumerate(records):
+        m = r.metrics
+        star = "*" if r.from_cache else " "
+        print(
+            f"{i:4d}{star}| {_fmt_cfg(r.config):29s} | {m['glups']:6.1f} "
+            f"| {m['limiter']:7s} | {m['v_dram']:10.1f} | {m['occupancy']:.2f}"
+        )
+
+
+def _print_tpu_rows(records) -> None:
+    print("rank | config                        | time us | limiter | VMEM MiB | layout")
+    for i, r in enumerate(records):
+        m = r.metrics
+        star = "*" if r.from_cache else " "
+        t = m["time_s"] * 1e6
+        print(
+            f"{i:4d}{star}| {_fmt_cfg(r.config):29s} | {t:7.1f} "
+            f"| {m['limiter']:7s} | {m['vmem_bytes'] / 2**20:8.1f} | {m['layout_efficiency']:.2f}"
+        )
+
+
+def _summary(res: SweepResult, top: int) -> dict:
+    return {
+        "kernel": res.kernel,
+        "backend": res.backend,
+        "machine": res.machine,
+        "method": res.method,
+        "candidates": res.stats.candidates,
+        "evaluated": res.stats.evaluated,
+        "cache_hits": res.stats.cache_hits,
+        "pruned": res.stats.pruned,
+        "wall_s": res.stats.wall_s,
+        "store": res.store_path,
+        "top": [
+            {"config": r.config, "metrics": r.metrics} for r in res.top(top)
+        ],
+        "pareto": [
+            {"config": r.config, "metrics": r.metrics} for r in res.pareto()
+        ],
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.list:
+        for name, e in sorted(KERNELS.items()):
+            print(f"{name:16s} [{e.backend}] {e.describe}")
+        return 0
+    if not args.kernel:
+        print("error: --kernel is required (see --list)", file=sys.stderr)
+        return 2
+    try:
+        entry = get_kernel(args.kernel)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    machine = args.machine or entry.default_machine
+    # the TPU backend has one estimation method; label its store accordingly
+    method = args.method if entry.backend == "gpu" else "tpu"
+    store = None
+    if not args.no_store:
+        store = ResultStore(
+            args.store or ResultStore.default_path(entry.name, machine, method)
+        )
+    try:
+        res = sweep(
+            entry.name,
+            machine=machine,
+            method=args.method,
+            store=store,
+            workers=args.workers,
+            prune=args.prune,
+            keep_fraction=args.keep_fraction,
+            sample=args.sample,
+            seed=args.seed,
+        )
+    except (ValueError, KeyError) as e:
+        print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
+        return 2
+    if args.as_json:
+        print(json.dumps(_summary(res, args.top), indent=2, default=list))
+        return 0
+    s = res.stats
+    print(f"exploring {res.kernel} on {res.machine} (method={res.method}): "
+          f"{s.candidates} candidates")
+    if res.space_report is not None:
+        print(f"space: {res.space_report}")
+    if res.prune_report is not None:
+        print(f"prune: {res.prune_report}")
+    print(f"cache: {s.cache_hits} hits, {s.evaluated} misses"
+          + (f" (store {res.store_path}, {len(store)} entries)" if store else ""))
+    print(f"swept {len(res.records)} configs in {s.wall_s:.1f}s "
+          f"({len(res.records) / max(s.wall_s, 1e-9):.0f} cfg/s)\n")
+    printer = _print_gpu_rows if res.backend == "gpu" else _print_tpu_rows
+    printer(res.top(args.top))
+    if args.pareto:
+        front = res.pareto()
+        print(f"\npareto front ({len(front)} non-dominated configs):")
+        printer(front)
+    return 0

@@ -1,0 +1,409 @@
+"""Batched parallel estimation engine — the one exploration path of the repo.
+
+Turns the per-config estimator (paper §III pipeline on the GPU side, the Pallas
+adaptation on the TPU side) into a high-throughput search engine:
+
+* candidates come from an explicit config list or the kernel's registered
+  :class:`~repro.explore.space.SearchSpace`,
+* optional analytic pruning (:mod:`repro.explore.prune`) discards hopeless
+  candidates before any full estimate runs,
+* estimation is memoized through a persistent :class:`~repro.explore.store.ResultStore`
+  (JSON-lines, resumable) keyed on ``(kernel, config, machine, method)``,
+* cache misses are evaluated serially or on a ``concurrent.futures`` process
+  pool (``workers > 0``, registry kernels only — worker processes rebuild the
+  spec from the registry so nothing heavyweight crosses the pipe),
+* results come back as the same :class:`~repro.core.ranking.RankedConfig`
+  objects ``core/ranking.py`` produces, sorted best-first, plus a Pareto
+  frontier over (throughput, DRAM volume, occupancy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+from ..core.capacity import DEFAULT_FITS, CapacityFits
+from ..core.estimator import VolumeEstimate, estimate
+from ..core.machine import GPUMachine, TPUMachine
+from ..core.model import Prediction, predict
+from ..core.ranking import RankedConfig
+from . import pareto as pareto_mod
+from .prune import PruneReport, prune_configs
+from .registry import KernelEntry, get_kernel, get_machine
+from .space import FilterReport, SearchSpace, subsample
+from .store import ResultStore, canonical_key
+
+_KEY_VERSION = 1
+
+
+def _fits_tag(fits: CapacityFits) -> str:
+    """Short stable fingerprint of the capacity-model parameters, so sweeps with
+    different calibrations never share cache entries."""
+    blob = canonical_key(fits=dataclasses.asdict(fits))
+    return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+
+# --------------------------------------------------------------------------- #
+# (de)serialization: full estimate + prediction round-trip through the store,
+# so cache hits reconstruct the exact RankedConfig a live estimate would yield
+# (json floats round-trip exactly via repr, preserving sort order).
+
+
+def _retuple(obj):
+    """JSON arrays -> tuples, recursively (configs store tuples as lists)."""
+    if isinstance(obj, list):
+        return tuple(_retuple(v) for v in obj)
+    if isinstance(obj, dict):
+        return {k: _retuple(v) for k, v in obj.items()}
+    return obj
+
+
+def _gpu_payload(rc: RankedConfig) -> dict:
+    est = dataclasses.asdict(rc.estimate)
+    est.pop("detail", None)  # diagnostic scratch; not part of the cached contract
+    return {
+        "config": rc.config,
+        "estimate": est,
+        "prediction": dataclasses.asdict(rc.prediction),
+    }
+
+
+def _gpu_from_payload(payload: dict) -> RankedConfig:
+    est = _retuple(payload["estimate"])
+    est.setdefault("detail", {})
+    est["detail"] = dict(est["detail"])
+    pred = _retuple(payload["prediction"])
+    return RankedConfig(
+        config=_retuple(dict(payload["config"])),
+        estimate=VolumeEstimate(**est),
+        prediction=Prediction(**pred),
+    )
+
+
+def gpu_metrics(rc: RankedConfig, machine: GPUMachine) -> dict:
+    """Flat metric dict for Pareto ranking and reporting."""
+    est, pred = rc.estimate, rc.prediction
+    bx, by, bz = est.block
+    block_threads = bx * by * bz
+    occupancy = (
+        est.wave_blocks * block_threads / (machine.n_sm * machine.max_threads_per_sm)
+        if machine.n_sm
+        else 0.0
+    )
+    return {
+        "glups": pred.glups,
+        "time_s": pred.time,
+        "limiter": pred.limiter,
+        "v_dram": est.v_dram,
+        "v_dram_load": est.v_dram_load,
+        "v_l2l1": est.v_l2l1,
+        "l1_cycles": est.l1_cycles,
+        "occupancy": occupancy,
+        "l1_oversubscription": est.l1_oversubscription,
+        "l2_oversubscription": est.l2_oversubscription,
+        "wave_blocks": est.wave_blocks,
+    }
+
+
+def _tpu_metrics(est) -> dict:
+    return {
+        "time_s": est.time,
+        "limiter": est.limiter,
+        "feasible": est.feasible,
+        "vmem_bytes": est.vmem_bytes,
+        "hbm_bytes": est.hbm_bytes,
+        "hbm_redundant": est.hbm_redundant,
+        "layout_efficiency": est.layout_efficiency,
+    }
+
+
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class SweepRecord:
+    """One estimated configuration with flat metrics; `ranked` on the GPU path."""
+
+    config: dict
+    metrics: dict
+    ranked: RankedConfig | None = None
+    from_cache: bool = False
+
+
+@dataclass(frozen=True)
+class SweepStats:
+    candidates: int
+    evaluated: int
+    cache_hits: int
+    pruned: int
+    wall_s: float
+
+
+@dataclass
+class SweepResult:
+    kernel: str
+    backend: str
+    machine: str
+    method: str
+    records: list[SweepRecord]  # sorted best-first
+    stats: SweepStats
+    prune_report: PruneReport | None = None
+    space_report: FilterReport | None = None
+    store_path: str | None = None
+
+    @property
+    def ranked(self) -> list[RankedConfig]:
+        """GPU-backend results as core/ranking.py RankedConfigs, best-first."""
+        return [r.ranked for r in self.records if r.ranked is not None]
+
+    def top(self, k: int = 5) -> list[SweepRecord]:
+        return self.records[:k]
+
+    def pareto(self, objectives=None) -> list[SweepRecord]:
+        if objectives is None:
+            objectives = (
+                pareto_mod.GPU_OBJECTIVES
+                if self.backend == "gpu"
+                else pareto_mod.TPU_OBJECTIVES
+            )
+        idx = pareto_mod.pareto_front([r.metrics for r in self.records], objectives)
+        return [self.records[i] for i in idx]
+
+
+# --------------------------------------------------------------------------- #
+# process-pool worker: rebuilds everything from picklable (name, config) args
+
+
+def _eval_gpu_worker(args) -> tuple[dict, VolumeEstimate, Prediction]:
+    kernel_name, cfg, machine, fits, method = args
+    build = get_kernel(kernel_name).build
+    spec = build(**cfg)
+    est = estimate(spec, machine, fits, method=method)
+    return cfg, est, predict(spec, est, machine)
+
+
+def _eval_gpu_local(build, cfg, machine, fits, method) -> RankedConfig:
+    spec = build(**cfg)
+    est = estimate(spec, machine, fits, method=method)
+    return RankedConfig(config=dict(cfg), estimate=est, prediction=predict(spec, est, machine))
+
+
+def _resolve(kernel) -> tuple[str, KernelEntry | None, Callable | None]:
+    """kernel argument -> (name, registry entry or None, gpu builder or None).
+
+    Custom builders are named by module-qualified path so distinct functions
+    never share cache keys; lambdas/closures/partials get angle-bracket names
+    (``<lambda>``, ``...<locals>...``, ``<custom>``) that the persistent-store
+    path rejects, because their closed-over state is invisible to the key.
+    """
+    if isinstance(kernel, str):
+        entry = get_kernel(kernel)
+        return entry.name, entry, entry.build
+    mod = getattr(kernel, "__module__", None)
+    qual = getattr(kernel, "__qualname__", "<custom>")
+    return (f"{mod}.{qual}" if mod else qual), None, kernel
+
+
+def sweep(
+    kernel,
+    configs: Sequence[dict] | None = None,
+    space: SearchSpace | None = None,
+    machine: GPUMachine | TPUMachine | str | None = None,
+    fits: CapacityFits = DEFAULT_FITS,
+    method: str = "sym",
+    store: ResultStore | str | None = None,
+    workers: int = 0,
+    prune: bool = False,
+    keep_fraction: float = 0.5,
+    sample: int | None = None,
+    seed: int = 0,
+) -> SweepResult:
+    """Explore a configuration space through the estimator, best-first.
+
+    ``kernel`` is a registry name (``repro.explore.registry.KERNELS``) or a GPU
+    spec builder callable ``(**config) -> KernelSpec``.  With a ``store``, all
+    previously estimated configs are cache hits and the sweep is resumable.
+    ``workers > 0`` spreads cache misses over a process pool (registry kernels
+    only; custom callables run serially to stay picklability-agnostic).
+    """
+    t0 = time.perf_counter()
+    name, entry, build = _resolve(kernel)
+    if entry is not None and entry.backend == "tpu":
+        if prune or sample is not None:
+            raise ValueError(
+                "prune/sample are not supported for TPU-backend kernels; "
+                "pass an explicit PallasConfig list via configs= instead"
+            )
+        return _sweep_tpu(name, entry, configs, machine, store, t0)
+    if build is None:
+        raise ValueError(f"kernel {name!r} has no GPU builder")
+    if isinstance(machine, str):
+        machine = get_machine(machine)
+    if machine is None:
+        machine = get_machine(entry.default_machine if entry else "V100")
+    if not isinstance(machine, GPUMachine):
+        raise ValueError(
+            f"kernel {name!r} uses the GPU (paper §III) estimator, which needs a "
+            f"GPUMachine; got {machine.name!r}"
+        )
+
+    space_report: FilterReport | None = None
+    if configs is None:
+        if space is None:
+            if entry is None or entry.space is None:
+                raise ValueError(f"no search space registered for kernel {name!r}")
+            space = entry.space()
+        space_report = FilterReport()
+        configs = space.configs(space_report)
+    configs = [dict(c) for c in configs]
+    if sample is not None:
+        configs = subsample(configs, sample, seed)
+    n_candidates = len(configs)
+
+    prune_report: PruneReport | None = None
+    if prune:
+        configs, prune_report = prune_configs(
+            build, configs, machine, keep_fraction=keep_fraction
+        )
+
+    if isinstance(store, (str, bytes)) or hasattr(store, "__fspath__"):
+        store = ResultStore(store)
+    if store is not None and entry is None and "<" in name:
+        raise ValueError(
+            f"persistent store refused for builder {name!r}: lambdas, closures "
+            "and partials have no stable cache identity (closed-over state is "
+            "invisible to the key) — use a module-level builder or a registry "
+            "kernel name, or pass store=None"
+        )
+
+    fits_tag = _fits_tag(fits)
+
+    def key_of(cfg: dict) -> str:
+        return canonical_key(
+            v=_KEY_VERSION,
+            kernel=name,
+            config=cfg,
+            machine=machine.name,
+            method=method,
+            fits=fits_tag,
+        )
+
+    records: list[SweepRecord | None] = [None] * len(configs)
+    misses: list[tuple[int, dict]] = []
+    cache_hits = 0
+    for i, cfg in enumerate(configs):
+        payload = store.get(key_of(cfg)) if store is not None else None
+        if payload is not None:
+            rc = _gpu_from_payload(payload)
+            records[i] = SweepRecord(
+                config=rc.config,
+                metrics=gpu_metrics(rc, machine),
+                ranked=rc,
+                from_cache=True,
+            )
+            cache_hits += 1
+        else:
+            misses.append((i, cfg))
+
+    def commit(i: int, rc: RankedConfig) -> None:
+        """Record + persist one result as soon as it lands, so an interrupted
+        sweep keeps everything estimated so far (mid-sweep resumability)."""
+        records[i] = SweepRecord(
+            config=rc.config, metrics=gpu_metrics(rc, machine), ranked=rc
+        )
+        if store is not None:
+            store.put(key_of(rc.config), _gpu_payload(rc))
+
+    use_pool = workers and workers > 0 and entry is not None and len(misses) > 1
+    if use_pool:
+        with ProcessPoolExecutor(max_workers=workers) as pool:
+            args = [(name, cfg, machine, fits, method) for _, cfg in misses]
+            for (i, _), (cfg, est, pred) in zip(misses, pool.map(_eval_gpu_worker, args)):
+                commit(i, RankedConfig(config=dict(cfg), estimate=est, prediction=pred))
+    else:
+        for i, cfg in misses:
+            commit(i, _eval_gpu_local(build, cfg, machine, fits, method))
+
+    done = [r for r in records if r is not None]
+    # identical ordering contract with core/ranking.py: stable sort on -glups
+    done.sort(key=lambda r: -r.ranked.glups)
+    return SweepResult(
+        kernel=name,
+        backend="gpu",
+        machine=machine.name,
+        method=method,
+        records=done,
+        stats=SweepStats(
+            candidates=n_candidates,
+            evaluated=len(misses),
+            cache_hits=cache_hits,
+            pruned=prune_report.dropped if prune_report else 0,
+            wall_s=time.perf_counter() - t0,
+        ),
+        prune_report=prune_report,
+        space_report=space_report,
+        store_path=str(store.path) if store is not None else None,
+    )
+
+
+def _sweep_tpu(name, entry, configs, machine, store, t0) -> SweepResult:
+    """TPU backend: Pallas BlockSpec-level estimation (core/tpu_estimator.py).
+
+    ``configs``, when given, is a list of PallasConfig candidates replacing the
+    registry default space.  Estimation is serial (index_map closures do not
+    pickle); fits/method are GPU-path concepts and do not apply here.
+    """
+    from ..core import tpu_estimator as te
+
+    if isinstance(machine, str):
+        machine = get_machine(machine)
+    if machine is None:
+        machine = get_machine(entry.default_machine)
+    if not isinstance(machine, TPUMachine):
+        raise ValueError(
+            f"kernel {name!r} uses the TPU (Pallas) estimator, which needs a "
+            f"TPUMachine; got {machine.name!r}"
+        )
+    if isinstance(store, (str, bytes)) or hasattr(store, "__fspath__"):
+        store = ResultStore(store)
+    cands = list(configs) if configs is not None else entry.tpu_configs()
+    records: list[SweepRecord] = []
+    cache_hits = evaluated = 0
+    for cfg in cands:
+        ident = {"name": cfg.name, **cfg.meta}
+        key = canonical_key(
+            v=_KEY_VERSION, kernel=name, config=ident, machine=machine.name, method="tpu"
+        )
+        payload = store.get(key) if store is not None else None
+        if payload is not None:
+            metrics = _retuple(payload["metrics"])
+            cache_hits += 1
+            records.append(
+                SweepRecord(config=_retuple(ident), metrics=dict(metrics), from_cache=True)
+            )
+            continue
+        est = te.estimate(cfg, machine)
+        evaluated += 1
+        metrics = _tpu_metrics(est)
+        if store is not None:
+            store.put(key, {"config": ident, "metrics": metrics})
+        records.append(SweepRecord(config=_retuple(ident), metrics=metrics))
+    records.sort(key=lambda r: r.metrics["time_s"])
+    return SweepResult(
+        kernel=name,
+        backend="tpu",
+        machine=machine.name,
+        method="tpu",
+        records=records,
+        stats=SweepStats(
+            candidates=len(cands),
+            evaluated=evaluated,
+            cache_hits=cache_hits,
+            pruned=0,
+            wall_s=time.perf_counter() - t0,
+        ),
+        store_path=str(store.path) if store is not None else None,
+    )

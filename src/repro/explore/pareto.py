@@ -1,0 +1,69 @@
+"""Pareto-frontier extraction and top-k selection over sweep metrics.
+
+A configuration dominates another when it is at least as good on every
+objective and strictly better on at least one.  The frontier is the set of
+non-dominated configurations — the candidates worth a real benchmark run once
+the analytic sweep has narrowed the space (paper §I.A's "highly efficient
+candidates").
+
+Objectives are ``(metric_key, "max"|"min")`` pairs over the flat metric dicts
+the engine produces.  Defaults: on the GPU path maximise predicted GLUPs,
+minimise DRAM volume per LUP, maximise occupancy; on the TPU path minimise
+predicted time and VMEM footprint, maximise layout efficiency.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from ..core.ranking import RankedConfig, top_k as _ranking_top_k
+
+GPU_OBJECTIVES: tuple[tuple[str, str], ...] = (
+    ("glups", "max"),
+    ("v_dram", "min"),
+    ("occupancy", "max"),
+)
+TPU_OBJECTIVES: tuple[tuple[str, str], ...] = (
+    ("time_s", "min"),
+    ("vmem_bytes", "min"),
+    ("layout_efficiency", "max"),
+)
+
+
+def _oriented(metrics: dict, objectives) -> tuple[float, ...]:
+    """Metric vector oriented so that larger is always better."""
+    out = []
+    for key, sense in objectives:
+        v = float(metrics[key])
+        out.append(v if sense == "max" else -v)
+    return tuple(out)
+
+
+def _vec_dominates(va: tuple, vb: tuple) -> bool:
+    """Domination on already-oriented (larger-is-better) metric vectors."""
+    return all(x >= y for x, y in zip(va, vb)) and any(x > y for x, y in zip(va, vb))
+
+
+def dominates(a: dict, b: dict, objectives=GPU_OBJECTIVES) -> bool:
+    """True iff config-metrics ``a`` Pareto-dominates ``b``."""
+    return _vec_dominates(_oriented(a, objectives), _oriented(b, objectives))
+
+
+def pareto_front(
+    metric_dicts: Sequence[dict], objectives=GPU_OBJECTIVES
+) -> list[int]:
+    """Indices of the non-dominated entries, preserving input order.
+
+    O(n^2) pairwise scan — sweep result sets are hundreds, not millions.
+    Duplicate metric vectors are all kept (none dominates the other).
+    """
+    vecs = [_oriented(m, objectives) for m in metric_dicts]
+    return [
+        i
+        for i, vi in enumerate(vecs)
+        if not any(j != i and _vec_dominates(vj, vi) for j, vj in enumerate(vecs))
+    ]
+
+
+def top_k(ranked: Sequence[RankedConfig], k: int = 5) -> list[RankedConfig]:
+    """Best-k by predicted throughput — delegates to core/ranking.py."""
+    return _ranking_top_k(ranked, k)

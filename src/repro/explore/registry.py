@@ -1,0 +1,155 @@
+"""Kernel + machine registry for the exploration engine.
+
+Maps the kernel names under ``src/repro/kernels/`` (plus the paper's GPU
+applications from ``core/appspec.py``) to everything a sweep needs:
+
+* a picklable config -> spec builder (GPU backend) or a PallasConfig space
+  factory (TPU backend),
+* the default :class:`~repro.explore.space.SearchSpace` for that kernel,
+* the default machine model.
+
+GPU entries are estimated with the paper §III pipeline
+(``core.estimator`` + ``core.model``); TPU entries with the Pallas adaptation
+(``core.tpu_estimator``).  TPU spaces are built lazily so importing the
+registry (e.g. inside process-pool workers) does not pull in jax.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from ..core import appspec
+from ..core.machine import TPU_V5E, V100, GPUMachine, TPUMachine
+from ..core.suggest import unknown_name_message
+from .space import SearchSpace, choice, exact_volume, pow2
+
+MACHINES: dict[str, GPUMachine | TPUMachine] = {
+    "V100": V100,
+    "TPUv5e": TPU_V5E,
+}
+
+
+def _block_fold_space(total_threads: int, zmax: int, folds) -> SearchSpace:
+    """The paper §IV.B space: pow2 block dims, fixed thread count, fold variants."""
+    return SearchSpace(
+        axes=(
+            pow2("bx", 1, 512),
+            pow2("by", 1, 512),
+            pow2("bz", 1, zmax),
+            choice("fold", tuple(folds)),
+        ),
+        constraints=(exact_volume(("bx", "by", "bz"), total_threads),),
+        assemble=lambda raw: {
+            "block": (raw["bx"], raw["by"], raw["bz"]),
+            "fold": raw["fold"],
+        },
+    )
+
+
+def stencil25_space() -> SearchSpace:
+    """162 configs: 54 pow2 block shapes (1024 threads) x {none, 2y, 2z} folding."""
+    return _block_fold_space(1024, 64, [(1, 1, 1), (1, 2, 1), (1, 1, 2)])
+
+
+def lbm_d3q15_space() -> SearchSpace:
+    """49 configs: pow2 block shapes at 512 threads (register limited), no folding."""
+    return _block_fold_space(512, 64, [(1, 1, 1)])
+
+
+def _tpu_stencil_configs():
+    from ..kernels.stencil25.ops import config_space
+
+    return config_space((256, 256, 512), r=4, dtype_bits=32)
+
+
+def _tpu_attention_configs():
+    from ..kernels.attention.ops import config_space
+
+    return config_space(4, 32, 8, 8192, 128, 16)
+
+
+def _tpu_wkv_configs():
+    from ..kernels.wkv.ops import config_space
+
+    return config_space(64, 4096, 64)
+
+
+def _tpu_lbm_configs():
+    from ..kernels.lbm_d3q15.ops import config_space
+
+    return config_space((128, 128, 128), dtype_bits=32)
+
+
+@dataclass(frozen=True)
+class KernelEntry:
+    """One explorable kernel: how to build configs and what machine runs them."""
+
+    name: str
+    backend: str  # "gpu" (paper §III estimator) | "tpu" (Pallas adaptation)
+    describe: str
+    build: Callable[..., object] | None = None  # gpu: (**cfg) -> KernelSpec
+    space: Callable[[], SearchSpace] | None = None  # gpu: default search space
+    tpu_configs: Callable[[], list] | None = None  # tpu: PallasConfig list
+    default_machine: str = "V100"
+
+
+KERNELS: dict[str, KernelEntry] = {
+    "stencil25": KernelEntry(
+        name="stencil25",
+        backend="gpu",
+        describe="range-4 3D25pt star stencil, V100 (paper §IV.C / Fig 17)",
+        build=appspec.star3d,
+        space=stencil25_space,
+        default_machine="V100",
+    ),
+    "lbm_d3q15": KernelEntry(
+        name="lbm_d3q15",
+        backend="gpu",
+        describe="D3Q15 Allen-Cahn LBM kernel, V100 (paper §IV.D / Fig 18)",
+        build=appspec.lbm_d3q15,
+        space=lbm_d3q15_space,
+        default_machine="V100",
+    ),
+    "stencil25_tpu": KernelEntry(
+        name="stencil25_tpu",
+        backend="tpu",
+        describe="stencil25 Pallas block-shape space on TPU v5e",
+        tpu_configs=_tpu_stencil_configs,
+        default_machine="TPUv5e",
+    ),
+    "lbm_d3q15_tpu": KernelEntry(
+        name="lbm_d3q15_tpu",
+        backend="tpu",
+        describe="LBM D3Q15 Pallas block space on TPU v5e",
+        tpu_configs=_tpu_lbm_configs,
+        default_machine="TPUv5e",
+    ),
+    "attention_tpu": KernelEntry(
+        name="attention_tpu",
+        backend="tpu",
+        describe="flash-attention Pallas (block_q, block_kv) space on TPU v5e",
+        tpu_configs=_tpu_attention_configs,
+        default_machine="TPUv5e",
+    ),
+    "wkv_tpu": KernelEntry(
+        name="wkv_tpu",
+        backend="tpu",
+        describe="chunked WKV Pallas chunk-length space on TPU v5e",
+        tpu_configs=_tpu_wkv_configs,
+        default_machine="TPUv5e",
+    ),
+}
+
+
+def get_kernel(name: str) -> KernelEntry:
+    entry = KERNELS.get(name)
+    if entry is None:
+        raise KeyError(unknown_name_message("kernel", name, KERNELS))
+    return entry
+
+
+def get_machine(name: str) -> GPUMachine | TPUMachine:
+    m = MACHINES.get(name)
+    if m is None:
+        raise KeyError(unknown_name_message("machine", name, MACHINES))
+    return m

@@ -1,0 +1,74 @@
+"""Persistent on-disk result store for exploration sweeps.
+
+Append-only JSON-lines file: one ``{"key": ..., "payload": ...}`` record per
+estimated configuration.  Loading replays the log into a dict (last write wins),
+so re-running a sweep is incremental — already-estimated configs are cache hits
+and only new configs cost estimator time.  Corrupt/truncated trailing lines
+(e.g. from a killed sweep) are skipped, which makes interrupted sweeps resumable.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Iterator
+
+
+def canonical_key(**parts) -> str:
+    """Stable cache key from JSON-able parts (tuples normalise to lists)."""
+    return json.dumps(parts, sort_keys=True, separators=(",", ":"), default=list)
+
+
+class ResultStore:
+    """Dict-like persistent store backed by an append-only JSONL file."""
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = Path(path)
+        self._mem: dict[str, dict] = {}
+        self._load()
+
+    def _load(self) -> None:
+        if not self.path.exists():
+            return
+        with self.path.open() as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                    self._mem[rec["key"]] = rec["payload"]
+                except (json.JSONDecodeError, KeyError, TypeError):
+                    continue  # truncated tail from an interrupted sweep
+
+    def get(self, key: str) -> dict | None:
+        return self._mem.get(key)
+
+    def put(self, key: str, payload: dict) -> None:
+        self._mem[key] = payload
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with self.path.open("a") as f:
+            f.write(json.dumps({"key": key, "payload": payload}, default=list) + "\n")
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._mem
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def keys(self) -> Iterator[str]:
+        return iter(self._mem)
+
+    def compact(self) -> None:
+        """Rewrite the log with one line per live key (drops superseded writes)."""
+        tmp = self.path.with_suffix(".tmp")
+        with tmp.open("w") as f:
+            for key, payload in self._mem.items():
+                f.write(json.dumps({"key": key, "payload": payload}, default=list) + "\n")
+        tmp.replace(self.path)
+
+    @staticmethod
+    def default_path(
+        kernel: str, machine: str, method: str, root: str | os.PathLike = "results/explore"
+    ) -> Path:
+        return Path(root) / f"{kernel}__{machine}__{method}.jsonl"

@@ -2,83 +2,126 @@
 
 ``baseline`` is the paper-faithful configuration.  Each other variant is one
 hypothesis from EXPERIMENTS.md §Perf; `apply_variant` returns the modified arch
-config plus a note recorded in the cell JSON.
+config plus a note recorded in the cell JSON.  Variants live in the ``VARIANTS``
+registry (name -> transform); parameterised families (``microbatchN``) are
+resolved by prefix before the registry lookup.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 from ..configs.base import ArchConfig
+from ..core.suggest import unknown_name_message
+
+Transform = Callable[[ArchConfig], tuple[ArchConfig, str]]
+
+
+def _padded_heads(arch: ArchConfig) -> int:
+    """Query heads padded up to a multiple of 16 so TP never splits a head."""
+    return ((arch.n_heads + 15) // 16) * 16
+
+
+def _pad_heads(arch: ArchConfig) -> tuple[ArchConfig, str]:
+    H, Ht = arch.n_heads, _padded_heads(arch)
+    return (
+        dataclasses.replace(arch, n_heads=Ht),
+        f"heads padded {H}->{Ht} for clean TP (beyond-paper)",
+    )
+
+
+def _pad_heads_sp(arch: ArchConfig) -> tuple[ArchConfig, str]:
+    H, Ht = arch.n_heads, _padded_heads(arch)
+    return (
+        dataclasses.replace(arch, n_heads=Ht),
+        f"heads {H}->{Ht} for clean TP + activation constraints engage (beyond-paper)",
+    )
+
+
+def _pad_heads_bf16(arch: ArchConfig) -> tuple[ArchConfig, str]:
+    H, Ht = arch.n_heads, _padded_heads(arch)
+    return (
+        dataclasses.replace(arch, n_heads=Ht, param_dtype="bfloat16"),
+        f"heads {H}->{Ht} + bf16 params (halved FSDP gathers)",
+    )
+
+
+def _moe_cf1(arch: ArchConfig) -> tuple[ArchConfig, str]:
+    if arch.moe is None:
+        raise ValueError(
+            f"variant 'moe_cf1' requires an MoE architecture, but "
+            f"{getattr(arch, 'name', arch)!r} has moe=None"
+        )
+    return (
+        dataclasses.replace(
+            arch, moe=dataclasses.replace(arch.moe, capacity_factor=1.0)
+        ),
+        "MoE capacity factor 1.0 (smaller dispatch tensors)",
+    )
+
+
+VARIANTS: dict[str, Transform] = {
+    "baseline": lambda arch: (arch, "baseline"),
+    "no_remat": lambda arch: (
+        dataclasses.replace(arch, remat=False),
+        "remat disabled (memory/compute trade)",
+    ),
+    "attn_chunk_512": lambda arch: (
+        dataclasses.replace(arch, attn_chunk=512),
+        "attention q-chunk 512",
+    ),
+    "attn_chunk_2048": lambda arch: (
+        dataclasses.replace(arch, attn_chunk=2048),
+        "attention q-chunk 2048",
+    ),
+    "pad_heads": _pad_heads,
+    "pad_heads_sp": _pad_heads_sp,
+    "pad_heads_bf16": _pad_heads_bf16,
+    "moe_cf1": _moe_cf1,
+    "fp32_params_bf16_all": lambda arch: (
+        dataclasses.replace(arch, param_dtype="bfloat16"),
+        "bf16 parameters (halves FSDP all-gather volume)",
+    ),
+    "rwkv_chunked": lambda arch: (
+        dataclasses.replace(arch, rwkv_chunk=16),
+        "chunked WKV (L=16): removes per-timestep state round-trips (beyond-paper)",
+    ),
+    "rwkv_chunked64": lambda arch: (
+        dataclasses.replace(arch, rwkv_chunk=64),
+        "chunked WKV (L=64)",
+    ),
+    "moe_group4k": lambda arch: (
+        dataclasses.replace(arch, moe_group=4096),
+        "MoE routing in 4096-token groups: dispatch cost /(S/4096) (beyond-paper)",
+    ),
+    "moe_ep_group4k": lambda arch: (
+        dataclasses.replace(arch, moe_group=4096, moe_ep=True),
+        "EP expert sharding over 'model' + 4096-token routing groups",
+    ),
+}
+
+
+def _microbatch(arch: ArchConfig, variant: str) -> tuple[ArchConfig, str]:
+    suffix = variant.removeprefix("microbatch")
+    try:
+        n = int(suffix)
+    except ValueError:
+        raise ValueError(
+            f"malformed variant {variant!r}: expected 'microbatch<N>' with integer N"
+        ) from None
+    return (
+        dataclasses.replace(arch, microbatch=n),
+        f"gradient accumulation over {n} microbatches (temp memory /{n})",
+    )
 
 
 def apply_variant(arch: ArchConfig, variant: str) -> tuple[ArchConfig, str]:
-    if variant == "baseline":
-        return arch, "baseline"
-    if variant == "no_remat":
-        return dataclasses.replace(arch, remat=False), "remat disabled (memory/compute trade)"
-    if variant == "attn_chunk_512":
-        return dataclasses.replace(arch, attn_chunk=512), "attention q-chunk 512"
-    if variant == "attn_chunk_2048":
-        return dataclasses.replace(arch, attn_chunk=2048), "attention q-chunk 2048"
-    if variant == "pad_heads":
-        # pad query heads up to a multiple of 16 so TP never splits a head
-        H = arch.n_heads
-        Ht = ((H + 15) // 16) * 16
-        return (
-            dataclasses.replace(arch, n_heads=Ht),
-            f"heads padded {H}->{Ht} for clean TP (beyond-paper)",
-        )
-    if variant == "moe_cf1":
-        assert arch.moe is not None
-        return (
-            dataclasses.replace(
-                arch, moe=dataclasses.replace(arch.moe, capacity_factor=1.0)
-            ),
-            "MoE capacity factor 1.0 (smaller dispatch tensors)",
-        )
-    if variant == "fp32_params_bf16_all":
-        return (
-            dataclasses.replace(arch, param_dtype="bfloat16"),
-            "bf16 parameters (halves FSDP all-gather volume)",
-        )
-    if variant == "rwkv_chunked":
-        return (
-            dataclasses.replace(arch, rwkv_chunk=16),
-            "chunked WKV (L=16): removes per-timestep state round-trips (beyond-paper)",
-        )
-    if variant == "moe_group4k":
-        return (
-            dataclasses.replace(arch, moe_group=4096),
-            "MoE routing in 4096-token groups: dispatch cost /(S/4096) (beyond-paper)",
-        )
-    if variant == "pad_heads_sp":
-        H = arch.n_heads
-        Ht = ((H + 15) // 16) * 16
-        return (
-            dataclasses.replace(arch, n_heads=Ht),
-            f"heads {H}->{Ht} for clean TP + activation constraints engage (beyond-paper)",
-        )
-    if variant == "moe_ep_group4k":
-        return (
-            dataclasses.replace(arch, moe_group=4096, moe_ep=True),
-            "EP expert sharding over 'model' + 4096-token routing groups",
-        )
-    if variant == "rwkv_chunked64":
-        return (
-            dataclasses.replace(arch, rwkv_chunk=64),
-            "chunked WKV (L=64)",
-        )
-    if variant == "pad_heads_bf16":
-        H = arch.n_heads
-        Ht = ((H + 15) // 16) * 16
-        return (
-            dataclasses.replace(arch, n_heads=Ht, param_dtype="bfloat16"),
-            f"heads {H}->{Ht} + bf16 params (halved FSDP gathers)",
-        )
+    """Apply a named variant; unknown names raise with a did-you-mean hint."""
     if variant.startswith("microbatch"):
-        n = int(variant.removeprefix("microbatch"))
-        return (
-            dataclasses.replace(arch, microbatch=n),
-            f"gradient accumulation over {n} microbatches (temp memory /{n})",
+        return _microbatch(arch, variant)
+    transform = VARIANTS.get(variant)
+    if transform is None:
+        raise ValueError(
+            unknown_name_message("variant", variant, VARIANTS, extra=("microbatch<N>",))
         )
-    raise ValueError(f"unknown variant {variant!r}")
+    return transform(arch)

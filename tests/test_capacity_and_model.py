@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="optional dev dependency; pip install -r requirements-dev.txt")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,300 @@
+"""repro.explore subsystem: search-space DSL, pruning bounds, engine/cache
+semantics, Pareto extraction, and the ordering contract with core/ranking.py."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.core import appspec, estimator, model, ranking
+from repro.core.machine import V100
+from repro.explore import (
+    SearchSpace,
+    choice,
+    divides_grid,
+    exact_volume,
+    max_volume,
+    multiple_of,
+    pareto_front,
+    pow2,
+    prune_configs,
+    sweep,
+    upper_bound_glups,
+)
+from repro.explore.registry import lbm_d3q15_space, stencil25_space
+from repro.explore.store import ResultStore, canonical_key
+
+GRID = (128, 64, 64)  # reduced grid keeps each full estimate cheap
+
+
+def build_small(block, fold=(1, 1, 1)):
+    return appspec.star3d(block=block, fold=fold, grid=GRID)
+
+
+# --------------------------------------------------------------------------- #
+# space DSL
+
+
+def test_registered_spaces_match_appspec_enumerations():
+    got = {
+        (c["block"], c["fold"]) for c in stencil25_space().configs()
+    }
+    want = {
+        (tuple(c["block"]), tuple(c["fold"]))
+        for c in appspec.stencil_config_space()
+    }
+    assert got == want and len(got) == 162
+    assert len(lbm_d3q15_space().configs()) == len(appspec.lbm_config_space()) == 49
+
+
+def test_space_constraints_and_report():
+    from repro.explore.space import FilterReport
+
+    sp = SearchSpace(
+        axes=(pow2("bx", 1, 64), pow2("by", 1, 64)),
+        constraints=(
+            max_volume(("bx", "by"), 256),
+            multiple_of("bx", 32),
+        ),
+    )
+    rep = FilterReport()
+    cfgs = sp.configs(rep)
+    assert all(c["bx"] * c["by"] <= 256 and c["bx"] % 32 == 0 for c in cfgs)
+    assert rep.raw == 49 and rep.kept == len(cfgs)
+    assert sum(rep.rejected.values()) > 0
+
+
+def test_space_divides_grid_and_volume():
+    sp = SearchSpace(
+        axes=(pow2("bx", 1, 8), choice("by", [3, 4])),
+        constraints=(divides_grid(("bx", "by"), (8, 8)),),
+        assemble=lambda raw: {"block": (raw["bx"], raw["by"])},
+    )
+    cfgs = sp.configs()
+    assert all(8 % b == 0 for c in cfgs for b in c["block"])
+    assert {c["block"] for c in cfgs} == {(1, 4), (2, 4), (4, 4), (8, 4)}
+    with pytest.raises(ValueError):
+        SearchSpace(axes=(pow2("a", 1, 2), pow2("a", 1, 2)))
+
+
+def test_space_sample_is_deterministic_subset():
+    sp = stencil25_space()
+    s1 = sp.sample(10, seed=3)
+    s2 = sp.sample(10, seed=3)
+    assert s1 == s2 and len(s1) == 10
+    all_cfgs = sp.configs()
+    assert all(c in all_cfgs for c in s1)
+    assert sp.sample(10**6) == all_cfgs  # n >= size -> everything
+
+
+# --------------------------------------------------------------------------- #
+# pruning
+
+
+def test_upper_bound_is_true_upper_bound():
+    for block in [(256, 4, 1), (16, 8, 8), (2, 128, 4)]:
+        spec = appspec.star3d(block=block)  # paper grid: sanity-clean
+        est = estimator.estimate(spec, method="sym")
+        pred = model.predict(spec, est)
+        assert upper_bound_glups(spec, V100) >= pred.glups
+
+
+def test_prune_keeps_top_fraction_and_accounts():
+    cfgs = stencil25_space().configs()
+    kept, rep = prune_configs(appspec.star3d, cfgs, V100, keep_fraction=0.25)
+    assert rep.total == len(cfgs)
+    assert rep.kept == len(kept)
+    assert rep.kept + rep.dropped == rep.total
+    assert 0 < len(kept) < len(cfgs)
+    # pruning preserves candidate order
+    idx = [cfgs.index(c) for c in kept]
+    assert idx == sorted(idx)
+
+
+def test_prune_sanity_gate():
+    from repro.explore.prune import sanity_reason
+
+    # 31-thread block: not a warp multiple
+    spec = appspec.star3d(block=(31, 1, 1))
+    assert "warp" in sanity_reason(spec, V100)
+    # tiny grid: cannot fill one wave of SMs
+    spec = appspec.star3d(block=(32, 4, 4), grid=(64, 16, 16))
+    assert "SM" in sanity_reason(spec, V100)
+    spec = appspec.star3d(block=(16, 8, 8))
+    assert sanity_reason(spec, V100) is None
+
+
+# --------------------------------------------------------------------------- #
+# store
+
+
+def test_store_roundtrip_and_resume(tmp_path):
+    p = tmp_path / "r.jsonl"
+    s = ResultStore(p)
+    key = canonical_key(kernel="k", config={"block": (1, 2, 3)})
+    assert s.get(key) is None
+    s.put(key, {"x": 1.5})
+    s.put(key, {"x": 2.5})  # supersedes
+    # fresh instance replays the log, last write wins
+    s2 = ResultStore(p)
+    assert s2.get(key) == {"x": 2.5}
+    assert len(s2) == 1
+    s2.compact()
+    assert len(p.read_text().strip().splitlines()) == 1
+
+
+def test_store_survives_corrupt_tail(tmp_path):
+    p = tmp_path / "r.jsonl"
+    s = ResultStore(p)
+    s.put("a", {"v": 1})
+    with p.open("a") as f:
+        f.write('{"key": "b", "payl')  # killed mid-write
+    s2 = ResultStore(p)
+    assert s2.get("a") == {"v": 1} and len(s2) == 1
+
+
+# --------------------------------------------------------------------------- #
+# engine
+
+
+CFGS = [
+    {"block": (32, 8, 4), "fold": (1, 1, 1)},
+    {"block": (16, 8, 8), "fold": (1, 1, 1)},
+    {"block": (128, 1, 8), "fold": (1, 2, 1)},
+    {"block": (4, 16, 16), "fold": (1, 1, 2)},
+]
+
+
+def test_engine_matches_direct_estimation_order():
+    """Engine ordering must equal the plain serial estimate->predict->sort loop
+    (the pre-subsystem core/ranking.py semantics)."""
+    direct = []
+    for cfg in CFGS:
+        spec = build_small(**cfg)
+        est = estimator.estimate(spec, V100, method="sym")
+        direct.append(
+            ranking.RankedConfig(
+                config=dict(cfg), estimate=est, prediction=model.predict(spec, est, V100)
+            )
+        )
+    direct.sort(key=lambda r: -r.glups)
+
+    res = sweep(build_small, configs=CFGS, machine=V100, method="sym")
+    assert [r.config for r in res.records] == [r.config for r in direct]
+    assert [r.metrics["glups"] for r in res.records] == [r.glups for r in direct]
+
+    # and rank_configs (the rewired public API) agrees too
+    rk = ranking.rank_configs(build_small, CFGS, machine=V100, method="sym")
+    assert [r.config for r in rk] == [r.config for r in direct]
+    assert [r.glups for r in rk] == [r.glups for r in direct]
+
+
+def test_engine_cache_roundtrip_preserves_ordering_and_metrics(tmp_path):
+    p = tmp_path / "sweep.jsonl"
+    r1 = sweep(build_small, configs=CFGS, machine=V100, store=p)
+    assert r1.stats.evaluated == len(CFGS) and r1.stats.cache_hits == 0
+    r2 = sweep(build_small, configs=CFGS, machine=V100, store=p)
+    assert r2.stats.evaluated == 0 and r2.stats.cache_hits == len(CFGS)
+    assert all(r.from_cache for r in r2.records)
+    assert [r.config for r in r1.records] == [r.config for r in r2.records]
+    # exact float round-trip through JSON -> identical metrics and ordering
+    assert [r.metrics for r in r1.records] == [r.metrics for r in r2.records]
+    assert [r.ranked.glups for r in r1.records] == [r.ranked.glups for r in r2.records]
+
+
+def test_engine_cache_key_separates_method_and_machine(tmp_path):
+    p = tmp_path / "sweep.jsonl"
+    sweep(build_small, configs=CFGS[:1], machine=V100, store=p, method="sym")
+    r = sweep(build_small, configs=CFGS[:1], machine=V100, store=p, method="enum")
+    assert r.stats.cache_hits == 0 and r.stats.evaluated == 1
+
+
+def test_engine_registry_kernel_and_unknown():
+    res = sweep("stencil25", configs=CFGS[:2])
+    assert res.backend == "gpu" and len(res.records) == 2
+    with pytest.raises(KeyError, match="unknown kernel"):
+        sweep("stencil26")
+
+
+def test_engine_cache_key_separates_fits(tmp_path):
+    from repro.core.capacity import CapacityFits, CapacityModel, Sigmoid
+
+    p = tmp_path / "sweep.jsonl"
+    sweep(build_small, configs=CFGS[:1], machine=V100, store=p)
+    custom = CapacityFits(l1=CapacityModel(Sigmoid(a=0.5, b=5.0, c=1.0)))
+    r = sweep(build_small, configs=CFGS[:1], machine=V100, store=p, fits=custom)
+    assert r.stats.cache_hits == 0 and r.stats.evaluated == 1
+
+
+def test_engine_sample_applies_to_explicit_configs():
+    r = sweep(build_small, configs=CFGS, machine=V100, sample=2, seed=1)
+    assert r.stats.candidates == 2 and len(r.records) == 2
+    # deterministic: same seed -> same subset
+    r2 = sweep(build_small, configs=CFGS, machine=V100, sample=2, seed=1)
+    assert {str(x.config) for x in r.records} == {str(x.config) for x in r2.records}
+
+
+def test_engine_tpu_rejects_gpu_only_options():
+    with pytest.raises(ValueError, match="not supported for TPU"):
+        sweep("wkv_tpu", prune=True)
+    with pytest.raises(ValueError, match="not supported for TPU"):
+        sweep("wkv_tpu", sample=3)
+
+
+def test_engine_store_refused_for_unstable_builder_identity(tmp_path):
+    # lambdas have no stable cache identity (closed-over state is invisible to
+    # the key) -> persistent store must be refused, not silently collided
+    with pytest.raises(ValueError, match="no stable cache identity"):
+        sweep(
+            lambda block, fold: appspec.star3d(block=block, fold=fold, grid=GRID),
+            configs=CFGS[:1],
+            machine=V100,
+            store=tmp_path / "s.jsonl",
+        )
+    # module-level builders are fine (exercised by the roundtrip tests above)
+
+
+def test_engine_rejects_backend_machine_mismatch():
+    with pytest.raises(ValueError, match="needs a TPUMachine"):
+        sweep("wkv_tpu", machine="V100")
+    with pytest.raises(ValueError, match="needs a GPUMachine"):
+        sweep("stencil25", configs=CFGS[:1], machine="TPUv5e")
+
+
+def test_occupancy_clamped_for_subwave_grids():
+    # 32-block launch on an 80-SM machine: occupancy must reflect the actual
+    # grid, not the per-wave capacity (hundreds of blocks)
+    res = sweep(
+        lambda block, fold=(1, 1, 1): appspec.star3d(
+            block=block, fold=fold, grid=(64, 16, 16)
+        ),
+        configs=[{"block": (32, 4, 4)}],
+        machine=V100,
+    )
+    m = res.records[0].metrics
+    assert m["wave_blocks"] == 32  # min(wave capacity, num_blocks) = num_blocks
+    assert m["occupancy"] == pytest.approx(32 * 512 / (80 * 2048))
+
+
+# --------------------------------------------------------------------------- #
+# pareto
+
+
+def test_pareto_front_basic():
+    objs = (("glups", "max"), ("v_dram", "min"))
+    ms = [
+        {"glups": 10.0, "v_dram": 20.0},  # dominated by #2
+        {"glups": 12.0, "v_dram": 25.0},  # front (best glups)
+        {"glups": 11.0, "v_dram": 18.0},  # front
+        {"glups": 9.0, "v_dram": 18.0},   # dominated by #2
+        {"glups": 5.0, "v_dram": 10.0},   # front (best dram)
+    ]
+    assert pareto_front(ms, objs) == [1, 2, 4]
+    # duplicates are both kept
+    assert pareto_front([ms[1], dict(ms[1])], objs) == [0, 1]
+
+
+def test_sweep_pareto_contains_best(tmp_path):
+    res = sweep(build_small, configs=CFGS, machine=V100)
+    front = res.pareto()
+    assert res.records[0].config in [r.config for r in front]

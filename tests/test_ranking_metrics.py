@@ -1,0 +1,70 @@
+"""Edge cases for the rank-correlation metrics in core/ranking.py
+(paper §IV.H uses Kendall's tau to score estimator-vs-measured orderings)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.ranking import kendall_tau, spearman_rho
+
+
+def test_perfect_agreement():
+    a = [1.0, 2.0, 3.0, 4.0]
+    assert kendall_tau(a, a) == 1.0
+    assert spearman_rho(a, a) == pytest.approx(1.0)
+
+
+def test_reversed_order():
+    a = [1.0, 2.0, 3.0, 4.0]
+    b = [4.0, 3.0, 2.0, 1.0]
+    assert kendall_tau(a, b) == -1.0
+    assert spearman_rho(a, b) == pytest.approx(-1.0)
+
+
+def test_short_inputs_are_defined():
+    # fewer than two elements: correlation is vacuous, defined as 1.0
+    assert kendall_tau([], []) == 1.0
+    assert kendall_tau([3.0], [7.0]) == 1.0
+    assert spearman_rho([], []) == 1.0
+    assert spearman_rho([3.0], [7.0]) == 1.0
+
+
+def test_all_ties_degenerate():
+    # constant sequences: no discordant or concordant pairs -> tau = 1.0,
+    # zero rank variance -> rho = 1.0 (degenerate-denominator convention)
+    a = [2.0, 2.0, 2.0]
+    assert kendall_tau(a, a) == 1.0
+    assert spearman_rho(a, a) == 1.0
+
+
+def test_partial_ties_drop_from_tau_denominator():
+    # tied pairs contribute neither concordant nor discordant
+    a = [1.0, 1.0, 2.0]
+    b = [1.0, 2.0, 3.0]
+    # pairs: (0,1) tied in a; (0,2) and (1,2) concordant -> tau = 1
+    assert kendall_tau(a, b) == 1.0
+    b_rev = [3.0, 2.0, 1.0]
+    assert kendall_tau(a, b_rev) == -1.0
+
+
+def test_mismatched_lengths_rejected():
+    with pytest.raises(AssertionError):
+        kendall_tau([1.0, 2.0], [1.0])
+
+
+def test_known_value():
+    # classic example: one discordant pair among six
+    a = [1, 2, 3, 4]
+    b = [1, 2, 4, 3]
+    assert kendall_tau(a, b) == pytest.approx((5 - 1) / 6)
+    rho = spearman_rho(a, b)
+    assert 0.7 < rho < 1.0
+
+
+def test_invariance_under_monotone_transform():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=20)
+    b = a + 0.01 * rng.normal(size=20)
+    assert kendall_tau(a, np.exp(a)) == 1.0
+    assert spearman_rho(a, a**3) == pytest.approx(1.0)
+    assert kendall_tau(a, b) == kendall_tau(np.exp(a), b)
