@@ -99,13 +99,14 @@ _ACC_CONFIGS = [
 
 def _accuracy(metric_est, metric_sim):
     from repro.core import appspec, estimator, exactcount, ranking
+    from repro.core.machine import V100
 
     grid = (256, 128, 128)
     est_v, sim_v = [], []
     for blk in _ACC_CONFIGS:
         spec = appspec.star3d(block=blk, grid=grid)
-        est = estimator.estimate(spec, method="sym")
-        sim = exactcount.simulate(spec)
+        est = estimator.estimate(spec, V100, method="sym")
+        sim = exactcount.simulate(spec, V100)
         est_v.append(metric_est(est))
         sim_v.append(metric_sim(sim))
     rho = ranking.spearman_rho(est_v, sim_v)
@@ -134,13 +135,14 @@ def fig9_12_capacity_fit():
     stand-in), reproducing the paper's Fig 9-12 calibration."""
     from repro.core import appspec, estimator, exactcount
     from repro.core.capacity import fit_sigmoid
+    from repro.core.machine import V100
 
     def run():
         xs, ys = [], []
         for blk in _ACC_CONFIGS:
             spec = appspec.star3d(block=blk, grid=(256, 128, 128))
-            est = estimator.estimate(spec, method="sym")
-            sim = exactcount.simulate(spec)
+            est = estimator.estimate(spec, V100, method="sym")
+            sim = exactcount.simulate(spec, V100)
             v_red = max(est.v_l1_up_load - est.v_l2l1_load_comp, 1e-9)
             r_sim = (sim.v_l2l1_load - est.v_l2l1_load_comp) / v_red
             xs.append(est.l1_oversubscription)
@@ -157,10 +159,11 @@ def fig9_12_capacity_fit():
 
 def isl_vs_enum_speed():
     from repro.core import appspec, estimator
+    from repro.core.machine import V100
 
     spec = appspec.star3d(block=(16, 2, 32))
-    us_sym, _ = _timed(estimator.estimate, spec, method="sym", repeat=3)
-    us_enum, _ = _timed(estimator.estimate, spec, method="enum", repeat=3)
+    us_sym, _ = _timed(estimator.estimate, spec, V100, method="sym", repeat=3)
+    us_enum, _ = _timed(estimator.estimate, spec, V100, method="enum", repeat=3)
     return (
         "isl_vs_enum_speed",
         us_sym,
@@ -237,6 +240,24 @@ def explore_cached_sweep():
     return "explore_cached_sweep", us_warm, derived
 
 
+def crossmachine_ranking_shift():
+    """Cross-machine exploration: the stencil space ranked on V100/A100/H100 in
+    one batched run — how portable is the predicted best config (ISSUE 2)?"""
+    from repro.explore.crossmachine import compare
+
+    def run():
+        return compare("stencil25", ["v100", "a100", "h100"], sample=24)
+
+    us, cm = _timed(run)
+    taus = " ".join(f"{a}/{b}={t:+.2f}" for (a, b), t in cm.tau.items())
+    win = cm.winners[0]
+    return (
+        "crossmachine_ranking_shift",
+        us,
+        f"winner_v100={win.config['block']} tau[{taus}]",
+    )
+
+
 def dryrun_roofline_summary():
     t0 = time.perf_counter()
     cells = []
@@ -276,6 +297,7 @@ BENCHES = [
     tpu_attention_ranking,
     tpu_wkv_ranking,
     explore_cached_sweep,
+    crossmachine_ranking_shift,
     dryrun_roofline_summary,
 ]
 

@@ -30,6 +30,7 @@ print(f"paper's prediction for this config: 27.6 GLup/s, DRAM-limited\n")
 ranked = ranking.rank_configs(
     lambda block, fold: appspec.star3d(block=block, fold=fold),
     appspec.stencil_config_space(),
+    machine=V100,  # registry: repro.core.machine.MACHINES (V100/A100/H100/...)
     method="sym",
 )
 print("top-5 of 162 configurations (evaluated analytically in seconds):")

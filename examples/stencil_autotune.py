@@ -14,6 +14,7 @@ reports all-cache-hits and finishes in milliseconds.
 Run: PYTHONPATH=src python examples/stencil_autotune.py
 """
 from repro.core import appspec, estimator, exactcount
+from repro.core.machine import V100
 from repro.explore import sweep
 from repro.explore.store import ResultStore
 
@@ -43,8 +44,8 @@ for kernel, build in (("stencil25", appspec.star3d), ("lbm_d3q15", appspec.lbm_d
         spec = build(
             block=r.config["block"], fold=r.config["fold"], grid=(256, 128, 128)
         )
-        est = estimator.estimate(spec, method="sym")
-        sim = exactcount.simulate(spec)
+        est = estimator.estimate(spec, V100, method="sym")
+        sim = exactcount.simulate(spec, V100)
         print(
             f"  {r.config['block']}: est {est.v_dram_load:6.1f} B/LUP "
             f"vs sim {sim.v_dram_load:6.1f} B/LUP "

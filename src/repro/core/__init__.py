@@ -14,13 +14,21 @@ from .address import (  # noqa: F401
 from .capacity import DEFAULT_FITS, CapacityFits, Sigmoid, fit_sigmoid  # noqa: F401
 from .estimator import VolumeEstimate, estimate  # noqa: F401
 from .machine import (  # noqa: F401
+    A100_40GB,
+    H100_SXM,
+    MACHINES,
     MULTI_POD_MESH,
     SINGLE_POD_MESH,
     TPU_V5E,
+    TPU_V6E,
     V100,
     GPUMachine,
     MeshSpec,
     TPUMachine,
+    canonical_machine_name,
+    get_machine,
+    gpu_machines,
+    tpu_machines,
 )
 from .model import Prediction, predict, predict_from_volumes  # noqa: F401
 from .ranking import (  # noqa: F401

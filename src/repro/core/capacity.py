@@ -87,6 +87,20 @@ class CapacityFits:
 
 DEFAULT_FITS = CapacityFits()
 
+# Per-architecture calibrations.  R_cap is a function of the oversubscription
+# *factor* O = V_alloc/V_cache, which already normalizes out absolute cache
+# size, so the V100-calibrated sigmoid parameters transfer as the initial
+# calibration for Ampere/Hopper (arXiv:2204.14242 re-fits the same functional
+# family on A100 and lands near the Volta shape).  Each machine carries its own
+# CapacityFits instance (`GPUMachine.fits`) so a per-architecture re-fit
+# (`fit_sigmoid` against core/exactcount.py) changes one constant here without
+# touching any call site — and the exploration cache keys fingerprint the fit
+# parameters AND the full machine constants, so re-calibrated or re-measured
+# machines never alias stale cache entries.
+V100_FITS = DEFAULT_FITS
+A100_FITS = CapacityFits()
+H100_FITS = CapacityFits()
+
 
 def fit_sigmoid(
     x: np.ndarray,

@@ -20,7 +20,7 @@ from . import footprint as fp_enum
 from . import symset as fp_sym
 from .address import KernelSpec, ThreadBox
 from .bankconflict import block_l1_cycles
-from .capacity import DEFAULT_FITS, CapacityFits
+from .capacity import CapacityFits
 from .machine import V100, GPUMachine
 from .waves import Wave, interior_block_box, representative_waves, wave_size
 
@@ -83,10 +83,17 @@ def _set_bytes(sets, granularity: int, method: str) -> int:
 def estimate(
     spec: KernelSpec,
     machine: GPUMachine = V100,
-    fits: CapacityFits = DEFAULT_FITS,
+    fits: CapacityFits | None = None,
     method: str = "sym",
 ) -> VolumeEstimate:
-    """Run the full paper §III estimation pipeline for one configuration."""
+    """Run the full paper §III estimation pipeline for one configuration.
+
+    ``fits=None`` uses the machine's own capacity-miss calibration
+    (``machine.fits``); pass an explicit :class:`CapacityFits` to override it
+    (e.g. a fresh re-fit against the cache simulator).
+    """
+    if fits is None:
+        fits = machine.fits
     line_sets_fn, overlap_fn, m = _footprint_fns(method)
     sector, line = machine.sector_bytes, machine.line_bytes
     est = VolumeEstimate(

@@ -1,16 +1,39 @@
-"""Machine models: the paper's V100 (GPU, faithful reproduction target) and the
-TPU v5e (our adaptation target), plus the multi-chip ICI fabric.
+"""Machine models: a parametric architecture registry.
 
-V100 numbers are the paper's §IV.A measured/configured values: 80 SMs @ 1.38 GHz, L1 128 kB
-(configured), L2 6 MB, 790 GB/s DRAM (STREAM scale), 2500 GB/s L2 bandwidth.
+The paper instantiates its estimator on one machine (V100); the method itself
+is architecture-parametric — the authors' follow-up (arXiv:2204.14242,
+"Analytical Performance Estimation during Code Generation on Modern GPUs")
+re-instantiates the identical model on A100 by swapping machine constants.
+This module holds those constants for every supported architecture:
 
-TPU v5e numbers are the assignment's hardware constants: 197 TFLOP/s bf16 per chip,
-819 GB/s HBM, ~50 GB/s/link ICI; VMEM 128 MB, (8,128) native vector tiling, 128x128
-MXU.
+GPU (paper §III estimator):
+
+* ``V100``      — the paper's §IV.A values: 80 SMs @ 1.38 GHz, L1 128 kB
+  (configured), L2 6 MB, 790 GB/s DRAM (STREAM scale), 2500 GB/s L2.
+* ``A100_40GB`` — arXiv:2204.14242's A100-SXM4-40GB instantiation: 108 SMs
+  @ 1.41 GHz, L1 192 kB, L2 40 MB, ~1.4 TB/s DRAM (STREAM scale), ~4.5 TB/s L2.
+* ``H100_SXM``  — H100-SXM5-80GB from NVIDIA's Hopper whitepaper: 132 SMs
+  @ 1.98 GHz boost, L1 256 kB, L2 50 MB, HBM3 ~3.0 TB/s (STREAM scale),
+  64 FP64 lanes/SM.
+
+TPU (Pallas adaptation):
+
+* ``TPU_V5E`` — 197 TFLOP/s bf16, 819 GB/s HBM, VMEM 128 MB, (8,128) native
+  vector tiling, 128x128 MXU, ~50 GB/s/link ICI.
+* ``TPU_V6E`` — Trillium: 918 TFLOP/s bf16, 1640 GB/s HBM, 32 GB HBM,
+  256x256 MXU, ~100 GB/s/link ICI.
+
+``MACHINES`` / ``get_machine`` form the registry used by estimation call
+sites, the exploration engine and the CLI; lookups are case- and
+punctuation-insensitive (``"a100"``, ``"A100-40GB"`` and ``"a100_40gb"`` all
+resolve to the same entry).
 """
 from __future__ import annotations
 
+import re
 from dataclasses import dataclass, field
+
+from .capacity import A100_FITS, DEFAULT_FITS, H100_FITS, CapacityFits
 
 
 @dataclass(frozen=True)
@@ -29,7 +52,13 @@ class GPUMachine:
     bank_bytes: int = 8
     max_threads_per_sm: int = 2048
     max_blocks_per_sm: int = 32
+    max_threads_per_block: int = 1024
+    warp_threads: int = 32
     regs_per_sm: int = 65536  # 32-bit registers
+    # per-architecture capacity-miss calibration (paper §III.E sigmoids); the
+    # V100 values transfer as the initial calibration for newer parts and can
+    # be re-fit per machine via capacity.fit_sigmoid + core/exactcount.py
+    fits: CapacityFits = DEFAULT_FITS
 
     def blocks_per_sm(self, block_threads: int, regs_per_thread: int) -> int:
         """Occupancy: thread-, block- and register-file-limited blocks per SM."""
@@ -47,6 +76,35 @@ class GPUMachine:
 
 
 V100 = GPUMachine()
+
+# arXiv:2204.14242 §IV: A100-SXM4-40GB — 108 SMs, 1.41 GHz, 192 kB unified L1,
+# 40 MB L2, measured STREAM ~1.4 TB/s of the 1555 GB/s spec, ~4.5 TB/s L2.
+A100_40GB = GPUMachine(
+    name="A100-SXM4-40GB",
+    n_sm=108,
+    clock_hz=1.41e9,
+    l1_bytes=192 * 1024,
+    l2_bytes=40 * 1024 * 1024,
+    bw_dram=1400e9,
+    bw_l2=4500e9,
+    peak_fp64=9.746e12,  # 108 SM * 32 FP64 lanes * 2 flop * 1.41 GHz
+    fits=A100_FITS,
+)
+
+# NVIDIA Hopper whitepaper: H100-SXM5-80GB — 132 SMs, 1.98 GHz boost, 256 kB
+# unified L1, 50 MB L2, HBM3 3.35 TB/s spec (~3.0 TB/s STREAM scale), and
+# 64 FP64 lanes per SM (vs 32 on Volta/Ampere).
+H100_SXM = GPUMachine(
+    name="H100-SXM5-80GB",
+    n_sm=132,
+    clock_hz=1.98e9,
+    l1_bytes=256 * 1024,
+    l2_bytes=50 * 1024 * 1024,
+    bw_dram=3000e9,
+    bw_l2=5500e9,
+    peak_fp64=33.45e12,  # 132 SM * 64 FP64 lanes * 2 flop * 1.98 GHz
+    fits=H100_FITS,
+)
 
 
 @dataclass(frozen=True)
@@ -77,6 +135,69 @@ class TPUMachine:
 
 
 TPU_V5E = TPUMachine()
+
+# Trillium (v6e): ~4.7x v5e peak bf16, 1640 GB/s HBM, 32 GB HBM per chip,
+# 256x256 MXU, roughly doubled per-link ICI bandwidth.
+TPU_V6E = TPUMachine(
+    name="tpu-v6e",
+    peak_bf16=918e12,
+    peak_fp32=459e12,
+    bw_hbm=1640e9,
+    hbm_bytes=32 * 2**30,
+    bw_ici_link=100e9,
+    mxu_dim=256,
+    vpu_flops=14.7e12,  # scaled with the 4096-lane (vs 1024) Trillium VPU
+)
+
+
+# --------------------------------------------------------------------------- #
+# architecture registry
+
+
+MACHINES: dict[str, GPUMachine | TPUMachine] = {
+    "V100": V100,
+    "A100": A100_40GB,
+    "H100": H100_SXM,
+    "TPUv5e": TPU_V5E,
+    "TPUv6e": TPU_V6E,
+}
+
+
+def _norm(name: str) -> str:
+    return re.sub(r"[^a-z0-9]", "", name.lower())
+
+
+def _lookup() -> dict[str, str]:
+    """normalized alias -> canonical registry key (keys + full model names)."""
+    table: dict[str, str] = {}
+    for key, m in MACHINES.items():
+        table[_norm(key)] = key
+        table[_norm(m.name)] = key
+    return table
+
+
+def canonical_machine_name(name: str) -> str:
+    """Registry key for any accepted spelling (``"a100"`` -> ``"A100"``)."""
+    from .suggest import unknown_name_message
+
+    key = _lookup().get(_norm(name))
+    if key is None:
+        raise KeyError(unknown_name_message("machine", name, MACHINES))
+    return key
+
+
+def get_machine(name: str) -> GPUMachine | TPUMachine:
+    """Resolve a machine by registry key, full model name, or any
+    case/punctuation variant thereof; unknown names get a did-you-mean."""
+    return MACHINES[canonical_machine_name(name)]
+
+
+def gpu_machines() -> dict[str, GPUMachine]:
+    return {k: m for k, m in MACHINES.items() if isinstance(m, GPUMachine)}
+
+
+def tpu_machines() -> dict[str, TPUMachine]:
+    return {k: m for k, m in MACHINES.items() if isinstance(m, TPUMachine)}
 
 
 @dataclass(frozen=True)

@@ -14,7 +14,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from .address import KernelSpec
-from .capacity import DEFAULT_FITS, CapacityFits
+from .capacity import CapacityFits
 from .estimator import VolumeEstimate
 from .machine import V100, GPUMachine
 from .model import Prediction
@@ -35,7 +35,7 @@ def rank_configs(
     build: Callable[..., KernelSpec],
     configs: Sequence[dict],
     machine: GPUMachine = V100,
-    fits: CapacityFits = DEFAULT_FITS,
+    fits: CapacityFits | None = None,
     method: str = "sym",
 ) -> list[RankedConfig]:
     """Estimate + predict every configuration; return sorted best-first.
@@ -43,7 +43,7 @@ def rank_configs(
     Thin wrapper over :func:`repro.explore.engine.sweep` (serial, uncached) —
     kept as the stable narrow API for callers that bring their own config list.
     Pass a registry kernel name to ``sweep`` directly for caching, pruning and
-    process-pool parallelism.
+    process-pool parallelism.  ``fits=None`` uses ``machine.fits``.
     """
     from ..explore.engine import sweep  # local import: explore depends on core
 

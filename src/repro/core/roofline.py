@@ -30,6 +30,9 @@ class RooflineReport:
     t_memory: float = 0.0
     t_collective: float = 0.0
     dtype_bits: int = 16
+    # per-chip peak used for the useful-compute term; set from the machine by
+    # build_report so the report never reads a machine singleton implicitly
+    peak_flops: float = TPU_V5E.peak_bf16
     per_axis: dict = field(default_factory=dict)
     notes: str = ""
 
@@ -57,7 +60,7 @@ class RooflineReport:
         """Useful-compute time / predicted step time (MFU upper bound estimate)."""
         if self.time <= 0:
             return 0.0
-        t_useful = self.model_flops / (self.chips * TPU_V5E.peak_bf16)
+        t_useful = self.model_flops / (self.chips * self.peak_flops)
         return t_useful / self.time
 
     def to_dict(self) -> dict:
@@ -117,6 +120,7 @@ def build_report(
         collective_bytes=collectives.total_wire_bytes,
         model_flops=model_flops,
         dtype_bits=dtype_bits,
+        peak_flops=machine.peak_flops(dtype_bits),
         notes=notes,
     )
     rep.t_compute = flops / machine.peak_flops(dtype_bits)

@@ -9,6 +9,7 @@ is the search layer that makes that fast at scale:
 * :mod:`repro.explore.engine`   — batched parallel estimation with memoization,
 * :mod:`repro.explore.store`    — persistent, resumable JSONL result store,
 * :mod:`repro.explore.pareto`   — Pareto frontier + top-k selection,
+* :mod:`repro.explore.crossmachine` — one space swept over several architectures,
 * :mod:`repro.explore.cli`      — ``python -m repro.explore --kernel stencil25 --top 5``.
 
 Quickstart::
@@ -18,10 +19,17 @@ Quickstart::
     best = res.top(5)           # best-first SweepRecords
     frontier = res.pareto()     # non-dominated (GLUPs, DRAM B/LUP, occupancy)
 """
+from .crossmachine import CrossMachineResult, compare, default_stores
 from .engine import SweepRecord, SweepResult, SweepStats, sweep
 from .pareto import GPU_OBJECTIVES, TPU_OBJECTIVES, pareto_front, top_k
 from .prune import prune_configs, upper_bound_glups
-from .registry import KERNELS, MACHINES, get_kernel, get_machine
+from .registry import (
+    KERNELS,
+    MACHINES,
+    canonical_machine_name,
+    get_kernel,
+    get_machine,
+)
 from .space import (
     Axis,
     Constraint,
@@ -40,6 +48,7 @@ from .store import ResultStore, canonical_key
 __all__ = [
     "Axis",
     "Constraint",
+    "CrossMachineResult",
     "GPU_OBJECTIVES",
     "KERNELS",
     "MACHINES",
@@ -50,6 +59,9 @@ __all__ = [
     "SweepStats",
     "TPU_OBJECTIVES",
     "canonical_key",
+    "canonical_machine_name",
+    "compare",
+    "default_stores",
     "choice",
     "divides_grid",
     "exact_volume",

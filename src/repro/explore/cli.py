@@ -4,6 +4,12 @@ Runs a full configuration-space sweep through the exploration engine, persists
 every estimate to a resumable JSONL store (re-invocations are incremental and
 report the cache-hit count), and prints the best-first ranking plus, on
 request, the Pareto frontier.
+
+``--machine`` picks an architecture from the registry (case-insensitive:
+``a100``, ``A100`` and ``A100-SXM4-40GB`` all work); ``--machines v100,a100``
+sweeps the same space over several architectures in one batched run and
+reports how the predicted ranking shifts between them (Kendall tau + where
+each machine's winner places elsewhere).
 """
 from __future__ import annotations
 
@@ -11,8 +17,15 @@ import argparse
 import json
 import sys
 
+from .crossmachine import CrossMachineResult, compare, default_stores
 from .engine import SweepResult, sweep
-from .registry import KERNELS, MACHINES, get_kernel
+from .registry import (
+    KERNELS,
+    MACHINES,
+    canonical_machine_name,
+    get_kernel,
+    get_machine,
+)
 from .store import ResultStore
 
 
@@ -23,12 +36,16 @@ def _build_parser() -> argparse.ArgumentParser:
     )
     p.add_argument("--kernel", help="kernel to explore (see --list)")
     p.add_argument("--list", action="store_true", help="list explorable kernels and exit")
-    p.add_argument("--machine", default=None, choices=sorted(MACHINES), help="machine model")
+    p.add_argument("--machine", default=None,
+                   help=f"machine model, case-insensitive (registry: {', '.join(sorted(MACHINES))})")
+    p.add_argument("--machines", default=None, metavar="M1,M2,...",
+                   help="comma-separated machines for a cross-machine comparison sweep")
     p.add_argument("--method", default="sym", choices=("sym", "enum"),
                    help="footprint method (paper §III.D.2 symbolic vs §III.D.1 enumeration)")
     p.add_argument("--top", type=int, default=5, help="print the best K configs")
     p.add_argument("--store", default=None,
-                   help="result store path (default results/explore/<kernel>__<machine>__<method>.jsonl)")
+                   help="result store path (default results/explore/<kernel>__<machine>__<method>.jsonl;"
+                        " per-machine defaults with --machines)")
     p.add_argument("--no-store", action="store_true", help="disable the persistent cache")
     p.add_argument("--workers", type=int, default=0,
                    help="process-pool workers for cache misses (0 = serial)")
@@ -98,6 +115,42 @@ def _summary(res: SweepResult, top: int) -> dict:
     }
 
 
+def _fmt_score(score, metric: str) -> str:
+    if score is None:
+        return "pruned"
+    if metric == "glups":
+        return f"{score:6.1f} GLup/s"
+    return f"{score * 1e6:7.1f} us"
+
+
+def _print_cross(cm: CrossMachineResult, top: int, args_pareto: bool = False) -> None:
+    printer = _print_gpu_rows if cm.backend == "gpu" else _print_tpu_rows
+    for name in cm.machines:
+        res = cm.results[name]
+        s = res.stats
+        print(f"\n== {name} ({res.machine}): {s.candidates} candidates, "
+              f"{s.cache_hits} cache hits, {s.evaluated} estimated ==")
+        printer(res.top(top))
+    if args_pareto:
+        for name in cm.machines:
+            front = cm.results[name].pareto()
+            print(f"\npareto front on {name} ({len(front)} non-dominated configs):")
+            printer(front)
+    print("\nranking shift across machines:")
+    print("  kendall tau over common configs: "
+          + "  ".join(
+              f"{a}/{b}=" + (f"{t:+.3f}" if t is not None else "n/a (<2 common)")
+              for (a, b), t in cm.tau.items()
+          ))
+    for w in cm.winners:
+        placements = "  ".join(
+            f"{m}: rank {('%d' % r) if r is not None else '-'} "
+            f"({_fmt_score(s, cm.score_metric).strip()})"
+            for m, (r, s) in w.placements.items()
+        )
+        print(f"  best on {w.machine}: {_fmt_cfg(w.config):29s} -> {placements}")
+
+
 def main(argv: list[str] | None = None) -> int:
     args = _build_parser().parse_args(argv)
     if args.list:
@@ -107,23 +160,68 @@ def main(argv: list[str] | None = None) -> int:
     if not args.kernel:
         print("error: --kernel is required (see --list)", file=sys.stderr)
         return 2
+    if args.machine and args.machines:
+        print("error: --machine and --machines are mutually exclusive", file=sys.stderr)
+        return 2
+    if args.store and args.machines:
+        print(
+            "error: --store names ONE file; --machines keeps one store per "
+            "machine at results/explore/<kernel>__<machine>__<method>.jsonl "
+            "(use --no-store to disable caching)",
+            file=sys.stderr,
+        )
+        return 2
     try:
         entry = get_kernel(args.kernel)
     except KeyError as e:
         print(f"error: {e.args[0]}", file=sys.stderr)
         return 2
-    machine = args.machine or entry.default_machine
     # the TPU backend has one estimation method; label its store accordingly
     method = args.method if entry.backend == "gpu" else "tpu"
+
+    if args.machines:
+        try:
+            names = [canonical_machine_name(m) for m in args.machines.split(",") if m]
+            stores = None
+            if not args.no_store:
+                stores = default_stores(entry.name, names, method)
+            cm = compare(
+                entry.name,
+                names,
+                method=args.method,
+                stores=stores,
+                workers=args.workers,
+                prune=args.prune,
+                keep_fraction=args.keep_fraction,
+                sample=args.sample,
+                seed=args.seed,
+            )
+        except (ValueError, KeyError) as e:
+            print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
+            return 2
+        if args.as_json:
+            print(json.dumps(cm.summary(args.top), indent=2, default=list))
+            return 0
+        print(f"cross-machine exploration of {cm.kernel} over {', '.join(cm.machines)} "
+              f"({len(next(iter(cm.results.values())).records)} common-space configs per machine)")
+        _print_cross(cm, args.top, args.pareto)
+        return 0
+
+    try:
+        machine_key = canonical_machine_name(args.machine or entry.default_machine)
+        get_machine(machine_key)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
     store = None
     if not args.no_store:
         store = ResultStore(
-            args.store or ResultStore.default_path(entry.name, machine, method)
+            args.store or ResultStore.default_path(entry.name, machine_key, method)
         )
     try:
         res = sweep(
             entry.name,
-            machine=machine,
+            machine=machine_key,
             method=args.method,
             store=store,
             workers=args.workers,

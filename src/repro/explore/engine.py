@@ -25,7 +25,7 @@ from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Sequence
 
-from ..core.capacity import DEFAULT_FITS, CapacityFits
+from ..core.capacity import CapacityFits
 from ..core.estimator import VolumeEstimate, estimate
 from ..core.machine import GPUMachine, TPUMachine
 from ..core.model import Prediction, predict
@@ -36,13 +36,21 @@ from .registry import KernelEntry, get_kernel, get_machine
 from .space import FilterReport, SearchSpace, subsample
 from .store import ResultStore, canonical_key
 
-_KEY_VERSION = 1
+_KEY_VERSION = 2  # v2: cache keys fingerprint the FULL machine constants
 
 
 def _fits_tag(fits: CapacityFits) -> str:
     """Short stable fingerprint of the capacity-model parameters, so sweeps with
     different calibrations never share cache entries."""
     blob = canonical_key(fits=dataclasses.asdict(fits))
+    return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+
+def _machine_tag(machine) -> str:
+    """Short stable fingerprint of EVERY machine constant, not just the name:
+    a ``dataclasses.replace``'d variant that keeps its name (re-measured
+    bandwidth, hypothetical cache size) must miss, never alias stale entries."""
+    blob = canonical_key(machine=dataclasses.asdict(machine))
     return hashlib.sha1(blob.encode()).hexdigest()[:12]
 
 
@@ -212,7 +220,7 @@ def sweep(
     configs: Sequence[dict] | None = None,
     space: SearchSpace | None = None,
     machine: GPUMachine | TPUMachine | str | None = None,
-    fits: CapacityFits = DEFAULT_FITS,
+    fits: CapacityFits | None = None,
     method: str = "sym",
     store: ResultStore | str | None = None,
     workers: int = 0,
@@ -249,6 +257,8 @@ def sweep(
             f"kernel {name!r} uses the GPU (paper §III) estimator, which needs a "
             f"GPUMachine; got {machine.name!r}"
         )
+    if fits is None:
+        fits = machine.fits  # per-architecture capacity-miss calibration
 
     space_report: FilterReport | None = None
     if configs is None:
@@ -280,6 +290,7 @@ def sweep(
         )
 
     fits_tag = _fits_tag(fits)
+    machine_tag = _machine_tag(machine)
 
     def key_of(cfg: dict) -> str:
         return canonical_key(
@@ -287,6 +298,7 @@ def sweep(
             kernel=name,
             config=cfg,
             machine=machine.name,
+            mconst=machine_tag,
             method=method,
             fits=fits_tag,
         )
@@ -315,7 +327,7 @@ def sweep(
             config=rc.config, metrics=gpu_metrics(rc, machine), ranked=rc
         )
         if store is not None:
-            store.put(key_of(rc.config), _gpu_payload(rc))
+            store.put(key_of(rc.config), _gpu_payload(rc), machine=machine.name)
 
     use_pool = workers and workers > 0 and entry is not None and len(misses) > 1
     if use_pool:
@@ -370,12 +382,18 @@ def _sweep_tpu(name, entry, configs, machine, store, t0) -> SweepResult:
     if isinstance(store, (str, bytes)) or hasattr(store, "__fspath__"):
         store = ResultStore(store)
     cands = list(configs) if configs is not None else entry.tpu_configs()
+    machine_tag = _machine_tag(machine)
     records: list[SweepRecord] = []
     cache_hits = evaluated = 0
     for cfg in cands:
         ident = {"name": cfg.name, **cfg.meta}
         key = canonical_key(
-            v=_KEY_VERSION, kernel=name, config=ident, machine=machine.name, method="tpu"
+            v=_KEY_VERSION,
+            kernel=name,
+            config=ident,
+            machine=machine.name,
+            mconst=machine_tag,
+            method="tpu",
         )
         payload = store.get(key) if store is not None else None
         if payload is not None:
@@ -389,7 +407,7 @@ def _sweep_tpu(name, entry, configs, machine, store, t0) -> SweepResult:
         evaluated += 1
         metrics = _tpu_metrics(est)
         if store is not None:
-            store.put(key, {"config": ident, "metrics": metrics})
+            store.put(key, {"config": ident, "metrics": metrics}, machine=machine.name)
         records.append(SweepRecord(config=_retuple(ident), metrics=metrics))
     records.sort(key=lambda r: r.metrics["time_s"])
     return SweepResult(

@@ -31,10 +31,6 @@ from ..core.bankconflict import block_l1_cycles
 from ..core.machine import V100, GPUMachine
 from ..core.waves import interior_block_box
 
-MAX_BLOCK_THREADS = 1024  # CUDA hardware limit
-WARP = 32
-
-
 def compulsory_bytes_per_lup(spec: KernelSpec) -> float:
     """Streaming lower bound on DRAM traffic: each field accessed by the kernel
     must cross the DRAM interface at least once per lattice update."""
@@ -46,10 +42,15 @@ def compulsory_bytes_per_lup(spec: KernelSpec) -> float:
 def sanity_reason(spec: KernelSpec, machine: GPUMachine = V100) -> str | None:
     """Hard infeasibility / obvious-waste reason, or None if the config is sane."""
     bt = spec.launch.block_threads
-    if bt > MAX_BLOCK_THREADS:
-        return f"block has {bt} threads > {MAX_BLOCK_THREADS} hardware limit"
-    if bt % WARP:
-        return f"block volume {bt} not a multiple of the {WARP}-thread warp"
+    if bt > machine.max_threads_per_block:
+        return (
+            f"block has {bt} threads > {machine.max_threads_per_block} hardware limit"
+        )
+    if bt % machine.warp_threads:
+        return (
+            f"block volume {bt} not a multiple of the "
+            f"{machine.warp_threads}-thread warp"
+        )
     if spec.launch.num_blocks < machine.n_sm:
         return (
             f"grid of {spec.launch.num_blocks} blocks cannot fill "

@@ -19,14 +19,24 @@ from dataclasses import dataclass
 from typing import Callable
 
 from ..core import appspec
-from ..core.machine import TPU_V5E, V100, GPUMachine, TPUMachine
+from ..core.machine import (
+    MACHINES,
+    GPUMachine,
+    TPUMachine,
+    canonical_machine_name,
+    get_machine,
+)
 from ..core.suggest import unknown_name_message
 from .space import SearchSpace, choice, exact_volume, pow2
 
-MACHINES: dict[str, GPUMachine | TPUMachine] = {
-    "V100": V100,
-    "TPUv5e": TPU_V5E,
-}
+__all__ = [
+    "KERNELS",
+    "MACHINES",
+    "KernelEntry",
+    "canonical_machine_name",
+    "get_kernel",
+    "get_machine",
+]
 
 
 def _block_fold_space(total_threads: int, zmax: int, folds) -> SearchSpace:
@@ -146,10 +156,3 @@ def get_kernel(name: str) -> KernelEntry:
     if entry is None:
         raise KeyError(unknown_name_message("kernel", name, KERNELS))
     return entry
-
-
-def get_machine(name: str) -> GPUMachine | TPUMachine:
-    m = MACHINES.get(name)
-    if m is None:
-        raise KeyError(unknown_name_message("machine", name, MACHINES))
-    return m

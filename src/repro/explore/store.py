@@ -1,10 +1,17 @@
 """Persistent on-disk result store for exploration sweeps.
 
-Append-only JSON-lines file: one ``{"key": ..., "payload": ...}`` record per
-estimated configuration.  Loading replays the log into a dict (last write wins),
-so re-running a sweep is incremental — already-estimated configs are cache hits
-and only new configs cost estimator time.  Corrupt/truncated trailing lines
-(e.g. from a killed sweep) are skipped, which makes interrupted sweeps resumable.
+Append-only JSON-lines file: one ``{"key": ..., "payload": ..., "machine": ...}``
+record per estimated configuration.  Loading replays the log into a dict (last
+write wins), so re-running a sweep is incremental — already-estimated configs
+are cache hits and only new configs cost estimator time.  Corrupt/truncated
+trailing lines (e.g. from a killed sweep) are skipped, which makes interrupted
+sweeps resumable.
+
+Schema note: the ``machine`` field (which architecture produced the record) was
+added for cross-machine exploration; records written before it existed load
+fine (the field reads as ``None``), and old readers ignore it — the cache key
+already disambiguates machines, ``machine`` exists for per-file accounting
+(:meth:`ResultStore.machines`).
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ class ResultStore:
     def __init__(self, path: str | os.PathLike):
         self.path = Path(path)
         self._mem: dict[str, dict] = {}
+        self._machine: dict[str, str | None] = {}
         self._load()
 
     def _load(self) -> None:
@@ -38,17 +46,23 @@ class ResultStore:
                 try:
                     rec = json.loads(line)
                     self._mem[rec["key"]] = rec["payload"]
+                    # pre-machine-field records read as machine=None
+                    self._machine[rec["key"]] = rec.get("machine")
                 except (json.JSONDecodeError, KeyError, TypeError):
                     continue  # truncated tail from an interrupted sweep
 
     def get(self, key: str) -> dict | None:
         return self._mem.get(key)
 
-    def put(self, key: str, payload: dict) -> None:
+    def put(self, key: str, payload: dict, machine: str | None = None) -> None:
         self._mem[key] = payload
+        self._machine[key] = machine
         self.path.parent.mkdir(parents=True, exist_ok=True)
+        rec: dict = {"key": key, "payload": payload}
+        if machine is not None:
+            rec["machine"] = machine
         with self.path.open("a") as f:
-            f.write(json.dumps({"key": key, "payload": payload}, default=list) + "\n")
+            f.write(json.dumps(rec, default=list) + "\n")
 
     def __contains__(self, key: str) -> bool:
         return key in self._mem
@@ -59,12 +73,23 @@ class ResultStore:
     def keys(self) -> Iterator[str]:
         return iter(self._mem)
 
+    def machines(self) -> dict[str | None, int]:
+        """Live-entry count per machine name (``None`` = pre-schema records)."""
+        out: dict[str | None, int] = {}
+        for key in self._mem:
+            m = self._machine.get(key)
+            out[m] = out.get(m, 0) + 1
+        return out
+
     def compact(self) -> None:
         """Rewrite the log with one line per live key (drops superseded writes)."""
         tmp = self.path.with_suffix(".tmp")
         with tmp.open("w") as f:
             for key, payload in self._mem.items():
-                f.write(json.dumps({"key": key, "payload": payload}, default=list) + "\n")
+                rec: dict = {"key": key, "payload": payload}
+                if self._machine.get(key) is not None:
+                    rec["machine"] = self._machine[key]
+                f.write(json.dumps(rec, default=list) + "\n")
         tmp.replace(self.path)
 
     @staticmethod

@@ -1,0 +1,108 @@
+"""Differential test layer: estimator vs deterministic LRU cache simulation,
+for EVERY registered GPU architecture.
+
+The paper validates the §III volume estimates against hardware performance
+counters on one machine (V100); its follow-up (arXiv:2204.14242) repeats the
+exercise on A100 by swapping machine constants.  Offline, the measurement
+stand-in is ``core/exactcount.py`` — a sectored-LRU simulation fed the exact
+address streams — which is independent of the estimator's compulsory/capacity
+split, so agreement is a real cross-check, not a tautology.
+
+For a seeded sample of stencil25 / LBM configurations we assert per-level
+relative-error envelopes on every registered GPU machine:
+
+* L2<-L1 load volume: tight (paper Figs 6/7: few-% stencil, ~10% LBM),
+* DRAM store volume: tight (write-allocate + dirty flush is nearly exact),
+* DRAM load volume: tight for the streaming-dominated stencil (Fig 14);
+  loose for LBM, where the paper itself reports the largest deviations
+  (Fig 16 — the capacity model overestimates pdf refetches vs true LRU).
+
+The envelopes are regression pins: they encode today's model quality per
+architecture so a future refactor cannot silently degrade one machine.
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.core import appspec, estimator, exactcount
+from repro.core.machine import gpu_machines
+
+SEED = 20260729
+N_PER_KERNEL = 2
+# smaller-than-paper grids keep each LRU simulation at a few seconds while
+# still providing >= 2 full waves on the widest machine (H100: 132 SMs,
+# register-limited to 1 block/SM -> wave of 132 blocks; grids below launch
+# 1024+ blocks)
+GRIDS = {"stencil25": (128, 128, 64), "lbm_d3q15": (128, 128, 64)}
+BUILDERS = {"stencil25": appspec.star3d, "lbm_d3q15": appspec.lbm_d3q15}
+SPACES = {
+    "stencil25": appspec.stencil_config_space,
+    "lbm_d3q15": appspec.lbm_config_space,
+}
+
+# per-kernel, per-level max relative error |est - sim| / sim (see module doc)
+ENVELOPE = {
+    "stencil25": {"v_l2l1_load": 0.15, "v_dram_load": 0.10, "v_dram_store": 0.10},
+    "lbm_d3q15": {"v_l2l1_load": 0.30, "v_dram_load": 1.00, "v_dram_store": 0.15},
+}
+
+
+def _sampled_configs(kernel: str) -> list[dict]:
+    """Deterministic sample of warp-coalesced configurations.
+
+    The paper validates its volume model on warp-contiguous layouts; sub-warp
+    x-widths shatter sectors into the model's known worst case (they are also
+    down-ranked by the L1 term long before the DRAM level matters), so the
+    differential sample draws from bx >= 32 configs.
+    """
+    cfgs = [c for c in SPACES[kernel]() if c["block"][0] >= 32]
+    return random.Random(SEED).sample(cfgs, N_PER_KERNEL)
+
+
+def _rel(est: float, sim: float) -> float:
+    return abs(est - sim) / max(sim, 1e-9)
+
+
+# one LRU simulation costs seconds; both tests below share (machine, config)
+# pairs, so memoize per session
+_MEMO: dict = {}
+
+
+def _est_and_sim(machine_key, kernel, cfg):
+    key = (machine_key, kernel, cfg["block"], cfg["fold"])
+    if key not in _MEMO:
+        machine = gpu_machines()[machine_key]
+        spec = BUILDERS[kernel](
+            block=cfg["block"], fold=cfg["fold"], grid=GRIDS[kernel]
+        )
+        _MEMO[key] = (
+            estimator.estimate(spec, machine, method="sym"),
+            exactcount.simulate(spec, machine),
+        )
+    return _MEMO[key]
+
+
+@pytest.mark.parametrize("machine_key", sorted(gpu_machines()))
+@pytest.mark.parametrize("kernel", sorted(BUILDERS))
+def test_estimator_matches_lru_simulation_within_envelope(machine_key, kernel):
+    env = ENVELOPE[kernel]
+    for cfg in _sampled_configs(kernel):
+        est, sim = _est_and_sim(machine_key, kernel, cfg)
+        for level, bound in env.items():
+            e, s = getattr(est, level), getattr(sim, level)
+            assert _rel(e, s) <= bound, (
+                f"{kernel} {cfg['block']} on {machine_key}: {level} "
+                f"est={e:.2f} sim={s:.2f} rel={_rel(e, s):.3f} > {bound}"
+            )
+
+
+@pytest.mark.parametrize("machine_key", sorted(gpu_machines()))
+def test_dram_load_never_below_compulsory(machine_key):
+    """Structural invariant on every architecture: the simulated DRAM load can
+    never beat the compulsory (cold-footprint) volume the estimator derives —
+    if it does, the wave/footprint geometry is wrong for that machine."""
+    for cfg in _sampled_configs("stencil25")[:1]:
+        est, sim = _est_and_sim(machine_key, "stencil25", cfg)
+        assert sim.v_dram_load >= 0.95 * est.v_dram_load_comp

@@ -298,3 +298,136 @@ def test_sweep_pareto_contains_best(tmp_path):
     res = sweep(build_small, configs=CFGS, machine=V100)
     front = res.pareto()
     assert res.records[0].config in [r.config for r in front]
+
+
+# --------------------------------------------------------------------------- #
+# machine registry + cross-machine comparison
+
+
+def test_machine_registry_lookup_variants():
+    from repro.core.machine import canonical_machine_name, get_machine, gpu_machines
+
+    assert canonical_machine_name("a100") == "A100"
+    assert canonical_machine_name("A100-SXM4-40GB") == "A100"  # full model name
+    assert canonical_machine_name("tpu_v5e") == "TPUv5e"
+    assert get_machine("h100").name == "H100-SXM5-80GB"
+    with pytest.raises(KeyError, match="unknown machine"):
+        get_machine("p100")
+    # every registered GPU machine carries its own capacity calibration
+    assert all(m.fits is not None for m in gpu_machines().values())
+
+
+def test_per_machine_fits_used_when_fits_omitted():
+    """sweep(fits=None) must pick up the machine's own calibration — an
+    explicit override still takes precedence (and changes the cache key,
+    per test_engine_cache_key_separates_fits)."""
+    import dataclasses
+
+    from repro.core.capacity import CapacityFits, CapacityModel, Sigmoid
+
+    custom = CapacityFits(l1=CapacityModel(Sigmoid(a=0.4, b=2.0, c=1.0)))
+    tweaked = dataclasses.replace(V100, fits=custom)
+    # (4,16,16) oversubscribes L1 -> the capacity term reacts to the fit
+    cfg = [{"block": (4, 16, 16), "fold": (1, 1, 2)}]
+    default = sweep(build_small, configs=cfg, machine=V100)
+    via_machine = sweep(build_small, configs=cfg, machine=tweaked)
+    via_override = sweep(build_small, configs=cfg, machine=V100, fits=custom)
+    assert (
+        via_machine.records[0].metrics["v_l2l1"]
+        == via_override.records[0].metrics["v_l2l1"]
+    )
+    assert default.records[0].metrics["v_l2l1"] != via_machine.records[0].metrics["v_l2l1"]
+
+
+def test_crossmachine_compare_gpu():
+    from repro.explore.crossmachine import compare
+
+    cm = compare("stencil25", ["v100", "a100"], configs=CFGS)
+    assert cm.machines == ["V100", "A100"]
+    assert set(cm.results) == {"V100", "A100"}
+    ((_, tau),) = cm.tau.items()
+    assert -1.0 <= tau <= 1.0
+    for w in cm.winners:
+        assert w.placements[w.machine][0] == 0  # each winner ranks 0 at home
+        assert set(w.placements) == {"V100", "A100"}
+    s = cm.summary(top=2)
+    assert s["kernel"] == "stencil25" and len(s["per_machine"]) == 2
+    assert len(s["per_machine"]["V100"]["top"]) == 2
+
+
+def test_crossmachine_compare_rejects_bad_machine_sets():
+    from repro.explore.crossmachine import compare
+
+    with pytest.raises(ValueError, match="shared backend"):
+        compare("stencil25", ["v100", "tpuv5e"], configs=CFGS[:2])
+    with pytest.raises(ValueError, match="duplicate"):
+        compare("stencil25", ["v100", "V100"], configs=CFGS[:2])
+    with pytest.raises(ValueError, match="at least two"):
+        compare("stencil25", ["v100"], configs=CFGS[:2])
+
+
+def test_crossmachine_compare_accepts_unregistered_machine_instances():
+    """dataclasses.replace'd hypothetical parts compare fine — the registry is
+    a convenience, not a gate; the instance's own name becomes its label."""
+    import dataclasses
+
+    from repro.explore.crossmachine import compare
+
+    big_l2 = dataclasses.replace(V100, name="V100-hypothetical-24MB-L2",
+                                 l2_bytes=24 * 1024 * 1024)
+    cm = compare("stencil25", [V100, big_l2], configs=CFGS)
+    assert cm.machines == ["V100", "V100-hypothetical-24MB-L2"]
+    assert all(w.placements[w.machine][0] == 0 for w in cm.winners)
+
+
+def test_crossmachine_tau_is_none_without_common_configs():
+    """< 2 shared survivors must report tau=None, never a fake +1.0."""
+    from repro.explore.crossmachine import compare
+
+    cm = compare("stencil25", ["v100", "a100"], configs=CFGS[:1])
+    assert cm.tau[("V100", "A100")] is None
+    assert cm.summary()["kendall_tau"] == {"V100/A100": None}
+
+
+def test_crossmachine_compare_tpu_generations():
+    from repro.explore.crossmachine import compare
+
+    cm = compare("wkv_tpu", ["tpuv5e", "tpuv6e"])
+    assert cm.backend == "tpu" and cm.score_metric == "time_s"
+    assert cm.machines == ["TPUv5e", "TPUv6e"]
+    assert all(w.placements[w.machine][0] == 0 for w in cm.winners)
+
+
+def test_cli_machines_smoke(capsys):
+    from repro.explore import cli
+
+    rc = cli.main(
+        ["--kernel", "stencil25", "--machines", "v100,a100",
+         "--sample", "6", "--top", "2", "--no-store"]
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "kendall tau" in out and "best on V100" in out and "A100" in out
+    # --machine and --machines are mutually exclusive
+    rc = cli.main(
+        ["--kernel", "stencil25", "--machine", "v100", "--machines", "v100,a100"]
+    )
+    assert rc == 2
+    # a single --store path cannot serve several per-machine caches
+    rc = cli.main(
+        ["--kernel", "stencil25", "--machines", "v100,a100", "--store", "/tmp/x.jsonl"]
+    )
+    capsys.readouterr()
+    assert rc == 2
+
+
+def test_cli_machines_pareto(capsys):
+    from repro.explore import cli
+
+    rc = cli.main(
+        ["--kernel", "stencil25", "--machines", "v100,a100",
+         "--sample", "6", "--top", "2", "--no-store", "--pareto"]
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "pareto front on V100" in out and "pareto front on A100" in out

@@ -1,0 +1,83 @@
+"""Golden-file regression tests for the explore CLI.
+
+Each golden file under ``tests/golden/`` is the exact ``--json`` summary of a
+small, fully deterministic CLI sweep (seeded 24-config subsample of the
+stencil25 space) on one machine model, with volatile fields (wall-clock,
+store path) stripped.  Any change to machine constants, the estimator, the
+capacity fits, the ranking order, or the CLI summary schema shows up as a
+diff here — this is what pins "V100 results are bit-identical" across
+refactors, and does the same for every other registered architecture.
+
+Regenerating after an INTENDED model change::
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden_cli.py
+
+then inspect and commit the rewritten files under ``tests/golden/``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.explore import cli
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+REGEN = os.environ.get("REPRO_REGEN_GOLDEN") == "1"
+
+CASES = {
+    "explore_stencil25_v100.json": ["--machine", "v100"],
+    "explore_stencil25_a100.json": ["--machine", "a100"],
+}
+BASE_ARGS = [
+    "--kernel", "stencil25",
+    "--sample", "24",
+    "--seed", "7",
+    "--top", "5",
+    "--no-store",
+    "--json",
+]
+
+
+def _volatile_stripped(summary: dict) -> dict:
+    out = dict(summary)
+    out.pop("wall_s", None)
+    out.pop("store", None)
+    return out
+
+
+def _run_cli(extra: list[str], capsys) -> dict:
+    rc = cli.main(BASE_ARGS + extra)
+    captured = capsys.readouterr()
+    assert rc == 0, captured.err
+    return _volatile_stripped(json.loads(captured.out))
+
+
+@pytest.mark.parametrize("golden_name", sorted(CASES))
+def test_cli_sweep_matches_golden(golden_name, capsys):
+    got = _run_cli(CASES[golden_name], capsys)
+    path = GOLDEN_DIR / golden_name
+    if REGEN:
+        path.write_text(json.dumps(got, indent=2, sort_keys=True) + "\n")
+        pytest.skip(f"regenerated {path}")
+    assert path.exists(), (
+        f"golden file {path} missing — generate it with "
+        "REPRO_REGEN_GOLDEN=1 (see module docstring)"
+    )
+    want = json.loads(path.read_text())
+    assert got == want, (
+        f"CLI output diverged from {golden_name}; if the change is intended, "
+        "regenerate with REPRO_REGEN_GOLDEN=1 and commit the diff"
+    )
+
+
+def test_goldens_disagree_across_machines():
+    """The two golden files must differ in ranking/metrics — if they ever
+    collapse to identical outputs, the machine parameter is not reaching the
+    estimator."""
+    v100 = json.loads((GOLDEN_DIR / "explore_stencil25_v100.json").read_text())
+    a100 = json.loads((GOLDEN_DIR / "explore_stencil25_a100.json").read_text())
+    assert v100["machine"] != a100["machine"]
+    assert v100["top"] != a100["top"]

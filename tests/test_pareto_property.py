@@ -1,0 +1,65 @@
+"""Property-based tests for explore/pareto.py (hypothesis, optional dep).
+
+The three defining properties of a Pareto frontier, over arbitrary finite
+metric sets and mixed max/min objective orientations:
+
+1. frontier members are mutually non-dominated,
+2. the frontier is invariant under input shuffling (as a multiset of metric
+   vectors — indices move, membership does not),
+3. every non-frontier point is dominated by at least one frontier point
+   (no point is excluded without a dominating witness).
+"""
+from __future__ import annotations
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency; pip install -r requirements-dev.txt")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.explore.pareto import dominates, pareto_front
+
+OBJECTIVES = (("glups", "max"), ("v_dram", "min"), ("occupancy", "max"))
+
+finite = st.floats(
+    min_value=-1e6, max_value=1e6, allow_nan=False, allow_infinity=False
+)
+metric_dicts = st.lists(
+    st.fixed_dictionaries({key: finite for key, _ in OBJECTIVES}),
+    min_size=1,
+    max_size=40,
+)
+
+
+@given(metric_dicts)
+@settings(max_examples=200, deadline=None)
+def test_frontier_is_mutually_non_dominated(ms):
+    front = pareto_front(ms, OBJECTIVES)
+    for i in front:
+        for j in front:
+            assert not dominates(ms[i], ms[j], OBJECTIVES) or i == j
+
+
+@given(metric_dicts, st.randoms(use_true_random=False))
+@settings(max_examples=200, deadline=None)
+def test_frontier_invariant_under_shuffling(ms, rng):
+    def vecs(metrics, idx):
+        return sorted(tuple(metrics[i][k] for k, _ in OBJECTIVES) for i in idx)
+
+    base = vecs(ms, pareto_front(ms, OBJECTIVES))
+    shuffled = list(ms)
+    rng.shuffle(shuffled)
+    assert vecs(shuffled, pareto_front(shuffled, OBJECTIVES)) == base
+
+
+@given(metric_dicts)
+@settings(max_examples=200, deadline=None)
+def test_every_dominated_point_has_a_frontier_witness(ms):
+    front = set(pareto_front(ms, OBJECTIVES))
+    assert front  # a non-empty finite set always has a non-dominated point
+    for i, m in enumerate(ms):
+        if i in front:
+            continue
+        assert any(dominates(ms[j], m, OBJECTIVES) for j in front), (
+            f"point {i} excluded from the frontier without a dominating witness"
+        )

@@ -1,0 +1,99 @@
+"""Resume-path coverage for the persistent sweep store (explore/store.py).
+
+The store's contract with the engine: an interrupted sweep loses at most the
+record being written; a re-run pays only for what is missing; cache identity
+is the full (kernel, config, machine, method, fits) key — so changing ONLY the
+machine must miss; and files written before the schema gained the ``machine``
+field keep loading.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.core import appspec
+from repro.core.machine import A100_40GB, V100
+from repro.explore import sweep
+from repro.explore.store import ResultStore
+
+GRID = (128, 64, 64)  # reduced grid keeps each full estimate cheap
+
+CFGS = [
+    {"block": (32, 8, 4), "fold": (1, 1, 1)},
+    {"block": (16, 8, 8), "fold": (1, 1, 1)},
+    {"block": (128, 1, 8), "fold": (1, 2, 1)},
+]
+
+
+def build_small(block, fold=(1, 1, 1)):
+    return appspec.star3d(block=block, fold=fold, grid=GRID)
+
+
+def test_interrupted_sweep_resumes_where_it_stopped(tmp_path):
+    p = tmp_path / "sweep.jsonl"
+    # "interrupted" run: only part of the space got estimated before the kill
+    partial = sweep(build_small, configs=CFGS[:2], machine=V100, store=p)
+    assert partial.stats.evaluated == 2
+    # resume over the full space: the two finished configs are free
+    full = sweep(build_small, configs=CFGS, machine=V100, store=p)
+    assert full.stats.cache_hits == 2 and full.stats.evaluated == 1
+    # and the resumed result is indistinguishable from a cold full sweep
+    cold = sweep(build_small, configs=CFGS, machine=V100)
+    assert [r.config for r in full.records] == [r.config for r in cold.records]
+    assert [r.metrics for r in full.records] == [r.metrics for r in cold.records]
+
+
+def test_cache_hit_on_identical_config_and_machine(tmp_path):
+    p = tmp_path / "sweep.jsonl"
+    sweep(build_small, configs=CFGS[:1], machine=V100, store=p)
+    again = sweep(build_small, configs=CFGS[:1], machine=V100, store=p)
+    assert again.stats.cache_hits == 1 and again.stats.evaluated == 0
+    assert again.records[0].from_cache
+
+
+def test_cache_miss_when_only_machine_changes(tmp_path):
+    p = tmp_path / "sweep.jsonl"
+    sweep(build_small, configs=CFGS[:1], machine=V100, store=p)
+    other = sweep(build_small, configs=CFGS[:1], machine=A100_40GB, store=p)
+    assert other.stats.cache_hits == 0 and other.stats.evaluated == 1
+    # both architectures now live in the same file, attributed per machine
+    s = ResultStore(p)
+    assert len(s) == 2
+    assert s.machines() == {V100.name: 1, A100_40GB.name: 1}
+
+
+def test_engine_skips_corrupt_trailing_line_and_rewrites_it(tmp_path):
+    p = tmp_path / "sweep.jsonl"
+    sweep(build_small, configs=CFGS[:2], machine=V100, store=p)
+    with p.open("a") as f:
+        f.write('{"key": "half-written rec')  # killed mid-write
+    res = sweep(build_small, configs=CFGS[:2], machine=V100, store=p)
+    assert res.stats.cache_hits == 2 and res.stats.evaluated == 0
+
+
+def test_cache_miss_when_machine_constants_change_under_same_name(tmp_path):
+    """Cache identity covers EVERY machine constant, not just the name: a
+    dataclasses.replace'd variant keeping its name (re-measured bandwidth,
+    hypothetical cache size) must miss, never serve the original's estimates."""
+    import dataclasses
+
+    p = tmp_path / "sweep.jsonl"
+    sweep(build_small, configs=CFGS[:1], machine=V100, store=p)
+    tweaked = dataclasses.replace(V100, l2_bytes=24 * 1024 * 1024)
+    assert tweaked.name == V100.name
+    res = sweep(build_small, configs=CFGS[:1], machine=tweaked, store=p)
+    assert res.stats.cache_hits == 0 and res.stats.evaluated == 1
+
+
+def test_pre_machine_schema_files_still_load(tmp_path):
+    """Files written before the ``machine`` record field existed stay valid."""
+    p = tmp_path / "sweep.jsonl"
+    sweep(build_small, configs=CFGS[:1], machine=V100, store=p)
+    # strip the machine field, simulating an old writer
+    stripped = [
+        {"key": rec["key"], "payload": rec["payload"]}
+        for rec in map(json.loads, p.read_text().splitlines())
+    ]
+    p.write_text("".join(json.dumps(r) + "\n" for r in stripped))
+    res = sweep(build_small, configs=CFGS[:1], machine=V100, store=p)
+    assert res.stats.cache_hits == 1 and res.stats.evaluated == 0
+    assert ResultStore(p).machines() == {None: 1}
