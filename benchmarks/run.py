@@ -240,6 +240,76 @@ def explore_cached_sweep():
     return "explore_cached_sweep", us_warm, derived
 
 
+def sweep_throughput():
+    """Exploration-engine throughput benchmark -> BENCH_sweep.json.
+
+    Three numbers per run, all over the full stencil25 registry space in the
+    same process (so they share machine noise):
+
+      * baseline_cfg_per_s — the per-config reference path (§III pipeline, one
+        ``estimator.estimate`` call per configuration; the pre-batching
+        engine's cost model),
+      * cold_cfg_per_s     — ``sweep(store=None)`` through the batched
+        ``estimate_many`` fast path, nothing cached,
+      * warm_cfg_per_s     — the same sweep re-run against a fully populated
+        persistent store (every config a cache hit).
+
+    Each measurement is the best of ``reps`` runs (min wall time).  The JSON
+    artifact starts the perf trajectory for the engine: ``speedup_cold`` is
+    the batched-vs-per-config ratio the tentpole is accountable for (>= 5x).
+    """
+    import tempfile
+
+    from repro.core import appspec, estimator
+    from repro.explore import sweep
+
+    kernel, reps = "stencil25", 2
+    cfgs = appspec.stencil_config_space()
+    specs = [appspec.star3d(block=c["block"], fold=c["fold"]) for c in cfgs]
+
+    def best_of(fn):
+        times, out = [], None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            times.append(time.perf_counter() - t0)
+        return min(times), out
+
+    def baseline():
+        return [estimator.estimate(s, method="sym") for s in specs]
+
+    t_base, _ = best_of(baseline)
+    t_cold, cold = best_of(lambda: sweep(kernel, store=None))
+    with tempfile.TemporaryDirectory() as d:
+        store = os.path.join(d, f"{kernel}.jsonl")
+        sweep(kernel, store=store)  # populate
+        t_warm, warm = best_of(lambda: sweep(kernel, store=store))
+    n = len(cfgs)
+    payload = {
+        "kernel": kernel,
+        "machine": cold.machine,
+        "method": cold.method,
+        "configs": n,
+        "reps": reps,
+        "baseline_cfg_per_s": n / t_base,
+        "cold_cfg_per_s": n / t_cold,
+        "warm_cfg_per_s": n / t_warm,
+        "speedup_cold": t_base / t_cold,
+        "speedup_warm": t_base / t_warm,
+        "warm_cache_hits": warm.stats.cache_hits,
+    }
+    with open("BENCH_sweep.json", "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    derived = (
+        f"base={payload['baseline_cfg_per_s']:.0f}cfg/s "
+        f"cold={payload['cold_cfg_per_s']:.0f}cfg/s "
+        f"warm={payload['warm_cfg_per_s']:.0f}cfg/s "
+        f"speedup_cold={payload['speedup_cold']:.1f}x"
+    )
+    return "sweep_throughput", t_cold * 1e6, derived
+
+
 def crossmachine_ranking_shift():
     """Cross-machine exploration: the stencil space ranked on V100/A100/H100 in
     one batched run — how portable is the predicted best config (ISSUE 2)?"""
@@ -297,14 +367,27 @@ BENCHES = [
     tpu_attention_ranking,
     tpu_wkv_ranking,
     explore_cached_sweep,
+    sweep_throughput,
     crossmachine_ranking_shift,
     dryrun_roofline_summary,
 ]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    """Run all benchmarks, or only those named on the command line
+    (``python benchmarks/run.py sweep_throughput``)."""
+    import sys
+
+    names = list(sys.argv[1:] if argv is None else argv)
+    by_name = {b.__name__: b for b in BENCHES}
+    unknown = [n for n in names if n not in by_name]
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmark(s) {unknown}; available: {', '.join(by_name)}"
+        )
+    selected = [by_name[n] for n in names] if names else BENCHES
     print("name,us_per_call,derived")
-    for bench in BENCHES:
+    for bench in selected:
         name, us, derived = bench()
         print(f"{name},{us:.0f},{derived}")
 

@@ -180,6 +180,16 @@ class KernelSpec:
         tx, ty, tz = self.launch.threads
         return tx * ty * tz * self.lups_per_thread
 
+    @property
+    def element_size(self) -> int:
+        """The kernel's arithmetic precision in bytes (8 = fp64, 4 = fp32).
+
+        Mixed-precision kernels report their *widest* field: the FP pipeline
+        runs at the widest precision touched, so the FP roofline term must be
+        held against that peak.
+        """
+        return max((f.element_size for f in self.fields), default=8)
+
     def replace(self, **kw) -> "KernelSpec":
         return dataclasses.replace(self, **kw)
 

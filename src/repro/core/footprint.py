@@ -103,6 +103,38 @@ def warp_requested_bytes(
     return total_sectors * granularity
 
 
+def requested_from_lane_matrices(
+    mats, n: int, granularity: int, warp_size: int = 32
+) -> int:
+    """V_up from :func:`repro.core.bankconflict.lane_address_matrices` output:
+    unique sectors per warp instruction sum row-independently, so one sort +
+    dedup over all rows equals the reference's per-access accumulation."""
+    from .bankconflict import _lane_rows
+
+    rows = _lane_rows(mats, n, warp_size)
+    if rows is None:
+        return 0
+    rows = np.sort(rows // granularity, axis=1)
+    uniq = (np.diff(rows, axis=1) != 0).sum() + rows.shape[0]
+    return int(uniq) * granularity
+
+
+def warp_requested_bytes_fast(
+    accesses: Sequence[Access],
+    box: ThreadBox,
+    granularity: int,
+    warp_size: int = 32,
+    stores: bool | None = False,
+) -> int:
+    """Batched-path :func:`warp_requested_bytes`: identical sector count via
+    batched address matrices (one vectorized address op per distinct
+    coefficient vector) and a single row-local sort + dedup."""
+    from .bankconflict import lane_address_matrices
+
+    mats, n = lane_address_matrices(accesses, box, stores=stores)
+    return requested_from_lane_matrices(mats, n, granularity, warp_size)
+
+
 def total_access_bytes(
     accesses: Sequence[Access], boxes: Sequence[ThreadBox], stores: bool | None = None
 ) -> int:

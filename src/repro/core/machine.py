@@ -46,6 +46,7 @@ class GPUMachine:
     bw_dram: float = 790e9  # B/s, STREAM scale
     bw_l2: float = 2500e9  # B/s
     peak_fp64: float = 7.066e12  # 80 SM * 32 FP64 lanes * 2 flop * 1.38 GHz
+    peak_fp32: float = 14.13e12  # 80 SM * 64 FP32 lanes * 2 flop * 1.38 GHz
     line_bytes: int = 128  # allocation granularity (L1 + L2)
     sector_bytes: int = 32  # transfer granularity
     n_banks: int = 16
@@ -59,6 +60,11 @@ class GPUMachine:
     # V100 values transfer as the initial calibration for newer parts and can
     # be re-fit per machine via capacity.fit_sigmoid + core/exactcount.py
     fits: CapacityFits = DEFAULT_FITS
+
+    def peak_fp(self, element_size: int) -> float:
+        """FP peak for the given arithmetic width in bytes: fp32 kernels must
+        be held against the fp32 peak, not the (half-rate) fp64 one."""
+        return self.peak_fp32 if element_size <= 4 else self.peak_fp64
 
     def blocks_per_sm(self, block_threads: int, regs_per_thread: int) -> int:
         """Occupancy: thread-, block- and register-file-limited blocks per SM."""
@@ -88,6 +94,7 @@ A100_40GB = GPUMachine(
     bw_dram=1400e9,
     bw_l2=4500e9,
     peak_fp64=9.746e12,  # 108 SM * 32 FP64 lanes * 2 flop * 1.41 GHz
+    peak_fp32=19.49e12,  # 108 SM * 64 FP32 lanes * 2 flop * 1.41 GHz
     fits=A100_FITS,
 )
 
@@ -103,6 +110,7 @@ H100_SXM = GPUMachine(
     bw_dram=3000e9,
     bw_l2=5500e9,
     peak_fp64=33.45e12,  # 132 SM * 64 FP64 lanes * 2 flop * 1.98 GHz
+    peak_fp32=66.9e12,  # 132 SM * 128 FP32 lanes * 2 flop * 1.98 GHz
     fits=H100_FITS,
 )
 

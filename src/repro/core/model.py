@@ -61,7 +61,8 @@ def predict(
     t_l2 = est.v_l2l1 * lups / machine.bw_l2
     # bank-conflict cycles accrue per SM; all SMs work in parallel
     t_l1 = est.l1_cycles * lups / (machine.n_sm * machine.clock_hz)
-    t_fp = est.flops * lups / machine.peak_fp64
+    # FP peak picked by the kernel's dtype: fp32 kernels run at the fp32 peak
+    t_fp = est.flops * lups / machine.peak_fp(spec.element_size)
     return Prediction(
         kernel=spec.name,
         block=spec.launch.block,
@@ -84,8 +85,13 @@ def predict_from_volumes(
     name: str = "phenomenological",
     block=(0, 0, 0),
     fold=(1, 1, 1),
+    element_size: int = 8,
 ) -> Prediction:
-    """Phenomenological prediction from *measured* volumes (paper's gray markers)."""
+    """Phenomenological prediction from *measured* volumes (paper's gray markers).
+
+    ``element_size`` selects the FP peak (8 = fp64, the paper's kernels;
+    4 = fp32), matching :func:`predict`'s dtype-aware FP term.
+    """
     return Prediction(
         kernel=name,
         block=tuple(block),
@@ -93,6 +99,6 @@ def predict_from_volumes(
         t_dram=v_dram * lups / machine.bw_dram,
         t_l2=v_l2 * lups / machine.bw_l2,
         t_l1=l1_cycles * lups / (machine.n_sm * machine.clock_hz),
-        t_fp=flops * lups / machine.peak_fp64,
+        t_fp=flops * lups / machine.peak_fp(element_size),
         lups=lups,
     )

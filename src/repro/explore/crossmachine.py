@@ -22,6 +22,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Sequence
 
+from ..core.estimator import EstimateCache
 from ..core.machine import GPUMachine, TPUMachine, canonical_machine_name, get_machine
 from ..core.ranking import kendall_tau
 from .engine import SweepResult, sweep
@@ -150,6 +151,11 @@ def compare(
             configs = subsample(configs, sample, seed)
             sample = None  # already applied; don't re-subsample inside sweep
 
+    # one shared estimate cache across all machines: block-level footprints and
+    # bank-conflict cycles are machine-independent, so an N-machine sweep pays
+    # that work once (wave-level footprints key on each machine's own wave
+    # geometry and stay separate; pool workers keep their own caches)
+    shared_cache = EstimateCache()
     results: dict[str, SweepResult] = {}
     for name, machine in resolved:
         store = (stores or {}).get(name)
@@ -164,6 +170,7 @@ def compare(
             keep_fraction=keep_fraction,
             sample=sample,
             seed=seed,
+            cache=shared_cache,
         )
 
     backend = next(iter(results.values())).backend

@@ -26,7 +26,7 @@ from dataclasses import dataclass
 from typing import Callable, Sequence
 
 from ..core.capacity import CapacityFits
-from ..core.estimator import VolumeEstimate, estimate
+from ..core.estimator import EstimateCache, VolumeEstimate, estimate_many
 from ..core.machine import GPUMachine, TPUMachine
 from ..core.model import Prediction, predict
 from ..core.ranking import RankedConfig
@@ -37,6 +37,10 @@ from .space import FilterReport, SearchSpace, subsample
 from .store import ResultStore, canonical_key
 
 _KEY_VERSION = 2  # v2: cache keys fingerprint the FULL machine constants
+# cache misses are estimated in chunks of this size through estimate_many: large
+# enough to amortize the hoisted invariants, small enough that an interrupted
+# sweep loses at most one chunk of store writes
+_BATCH_CHUNK = 32
 
 
 def _fits_tag(fits: CapacityFits) -> str:
@@ -167,8 +171,15 @@ class SweepResult:
         """GPU-backend results as core/ranking.py RankedConfigs, best-first."""
         return [r.ranked for r in self.records if r.ranked is not None]
 
+    def _feasible(self) -> list[SweepRecord]:
+        """Records eligible for selection: TPU-backend configs that failed the
+        VMEM gate (``feasible=False``, ``time_s=inf``) stay in ``records`` for
+        accounting but must never be *recommended* — an infeasible config can
+        otherwise survive the frontier via min-VMEM/max-layout objectives."""
+        return [r for r in self.records if r.metrics.get("feasible", True)]
+
     def top(self, k: int = 5) -> list[SweepRecord]:
-        return self.records[:k]
+        return self._feasible()[:k]
 
     def pareto(self, objectives=None) -> list[SweepRecord]:
         if objectives is None:
@@ -177,26 +188,26 @@ class SweepResult:
                 if self.backend == "gpu"
                 else pareto_mod.TPU_OBJECTIVES
             )
-        idx = pareto_mod.pareto_front([r.metrics for r in self.records], objectives)
-        return [self.records[i] for i in idx]
+        feasible = self._feasible()
+        idx = pareto_mod.pareto_front([r.metrics for r in feasible], objectives)
+        return [feasible[i] for i in idx]
 
 
 # --------------------------------------------------------------------------- #
-# process-pool worker: rebuilds everything from picklable (name, config) args
+# process-pool worker: rebuilds everything from picklable (name, configs) args;
+# each worker runs its chunk through the batched fast path with its own
+# EstimateCache (hoisted invariants are shared within the chunk)
 
 
-def _eval_gpu_worker(args) -> tuple[dict, VolumeEstimate, Prediction]:
-    kernel_name, cfg, machine, fits, method = args
+def _eval_gpu_batch_worker(args) -> list[tuple[dict, VolumeEstimate, Prediction]]:
+    kernel_name, cfgs, machine, fits, method = args
     build = get_kernel(kernel_name).build
-    spec = build(**cfg)
-    est = estimate(spec, machine, fits, method=method)
-    return cfg, est, predict(spec, est, machine)
-
-
-def _eval_gpu_local(build, cfg, machine, fits, method) -> RankedConfig:
-    spec = build(**cfg)
-    est = estimate(spec, machine, fits, method=method)
-    return RankedConfig(config=dict(cfg), estimate=est, prediction=predict(spec, est, machine))
+    specs = [build(**cfg) for cfg in cfgs]
+    ests = estimate_many(specs, machine, fits, method=method)
+    return [
+        (cfg, est, predict(spec, est, machine))
+        for cfg, spec, est in zip(cfgs, specs, ests)
+    ]
 
 
 def _resolve(kernel) -> tuple[str, KernelEntry | None, Callable | None]:
@@ -228,14 +239,19 @@ def sweep(
     keep_fraction: float = 0.5,
     sample: int | None = None,
     seed: int = 0,
+    cache: EstimateCache | None = None,
 ) -> SweepResult:
     """Explore a configuration space through the estimator, best-first.
 
     ``kernel`` is a registry name (``repro.explore.registry.KERNELS``) or a GPU
     spec builder callable ``(**config) -> KernelSpec``.  With a ``store``, all
     previously estimated configs are cache hits and the sweep is resumable.
-    ``workers > 0`` spreads cache misses over a process pool (registry kernels
-    only; custom callables run serially to stay picklability-agnostic).
+    ``workers > 0`` spreads cache-miss chunks over a process pool (registry
+    kernels only; custom callables run serially to stay picklability-agnostic).
+    Estimation always goes through the batched ``estimate_many`` fast path;
+    pass an :class:`~repro.core.estimator.EstimateCache` to share its hoisted
+    machine-independent invariants across sweeps (e.g. a cross-machine
+    comparison — serial path only, process-pool workers keep their own).
     """
     t0 = time.perf_counter()
     name, entry, build = _resolve(kernel)
@@ -273,11 +289,21 @@ def sweep(
         configs = subsample(configs, sample, seed)
     n_candidates = len(configs)
 
+    if cache is None:
+        cache = EstimateCache()
+
+    # specs built once: pruning and estimation share them (and the cache, so
+    # the bound's bank-conflict cycles are reused by the full estimate)
+    specs_by_idx: dict[int, object] = {}
     prune_report: PruneReport | None = None
     if prune:
+        specs = [build(**cfg) for cfg in configs]
         configs, prune_report = prune_configs(
-            build, configs, machine, keep_fraction=keep_fraction
+            build, configs, machine, keep_fraction=keep_fraction,
+            specs=specs, cache=cache,
         )
+        kept = prune_report.kept_indices or []
+        specs_by_idx = {new_i: specs[old_i] for new_i, old_i in enumerate(kept)}
 
     if isinstance(store, (str, bytes)) or hasattr(store, "__fspath__"):
         store = ResultStore(store)
@@ -331,13 +357,31 @@ def sweep(
 
     use_pool = workers and workers > 0 and entry is not None and len(misses) > 1
     if use_pool:
+        # chunk so each worker message amortizes the batch path's hoisting
+        per_worker = -(-len(misses) // workers)
+        size = max(1, min(_BATCH_CHUNK, per_worker))
+        chunks = [misses[i : i + size] for i in range(0, len(misses), size)]
         with ProcessPoolExecutor(max_workers=workers) as pool:
-            args = [(name, cfg, machine, fits, method) for _, cfg in misses]
-            for (i, _), (cfg, est, pred) in zip(misses, pool.map(_eval_gpu_worker, args)):
-                commit(i, RankedConfig(config=dict(cfg), estimate=est, prediction=pred))
+            args = [(name, [cfg for _, cfg in ch], machine, fits, method) for ch in chunks]
+            for ch, results in zip(chunks, pool.map(_eval_gpu_batch_worker, args)):
+                for (i, _), (cfg, est, pred) in zip(ch, results):
+                    commit(i, RankedConfig(config=dict(cfg), estimate=est, prediction=pred))
     else:
-        for i, cfg in misses:
-            commit(i, _eval_gpu_local(build, cfg, machine, fits, method))
+        for start in range(0, len(misses), _BATCH_CHUNK):
+            chunk = misses[start : start + _BATCH_CHUNK]
+            specs = [
+                specs_by_idx.get(i) or build(**cfg) for i, cfg in chunk
+            ]
+            ests = estimate_many(specs, machine, fits, method=method, cache=cache)
+            for (i, cfg), spec, est in zip(chunk, specs, ests):
+                commit(
+                    i,
+                    RankedConfig(
+                        config=dict(cfg),
+                        estimate=est,
+                        prediction=predict(spec, est, machine),
+                    ),
+                )
 
     done = [r for r in records if r is not None]
     # identical ordering contract with core/ranking.py: stable sort on -glups
@@ -359,6 +403,52 @@ def sweep(
         space_report=space_report,
         store_path=str(store.path) if store is not None else None,
     )
+
+
+def _tpu_config_ident(cfg) -> dict:
+    """The FULL distinguishing identity of a PallasConfig for cache keying.
+
+    ``{"name": ..., **meta}`` alone is not enough: two configs differing in
+    block shapes or grid but not meta would silently alias one store entry.
+    Affine ``index_map`` closures cannot be serialized, so they are
+    fingerprinted by probing at the grid origin and at each unit grid step —
+    which determines an affine map completely.
+    """
+    dims = len(cfg.grid)
+    origin = (0,) * dims
+
+    def probe(index_map, at):
+        return tuple(int(v) for v in index_map(*at))
+
+    return {
+        "name": cfg.name,
+        "meta": dict(cfg.meta),
+        "grid": cfg.grid,
+        "flops_per_step": cfg.flops_per_step,
+        "is_matmul": cfg.is_matmul,
+        "scratch_bytes": cfg.scratch_bytes,
+        "accesses": [
+            {
+                "name": a.name,
+                "block_shape": a.block_shape,
+                "dtype_bits": a.dtype_bits,
+                "is_output": a.is_output,
+                "index_map": (
+                    [probe(a.index_map, origin)]
+                    + [
+                        probe(
+                            a.index_map,
+                            tuple(1 if j == d else 0 for j in range(dims)),
+                        )
+                        for d in range(dims)
+                    ]
+                    if dims
+                    else []
+                ),
+            }
+            for a in cfg.accesses
+        ],
+    }
 
 
 def _sweep_tpu(name, entry, configs, machine, store, t0) -> SweepResult:
@@ -390,7 +480,7 @@ def _sweep_tpu(name, entry, configs, machine, store, t0) -> SweepResult:
         key = canonical_key(
             v=_KEY_VERSION,
             kernel=name,
-            config=ident,
+            config=_tpu_config_ident(cfg),
             machine=machine.name,
             mconst=machine_tag,
             method="tpu",

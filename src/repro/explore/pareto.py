@@ -53,15 +53,25 @@ def pareto_front(
 ) -> list[int]:
     """Indices of the non-dominated entries, preserving input order.
 
-    O(n^2) pairwise scan — sweep result sets are hundreds, not millions.
-    Duplicate metric vectors are all kept (none dominates the other).
+    Sort-based frontier scan: after sorting the oriented vectors
+    lexicographically descending, any dominator of a point precedes it (it is
+    >= everywhere and > somewhere, so its first differing component is
+    larger), and dominance is transitive — so each point only needs checking
+    against the *current frontier*, never the full set.  O(n log n + n·f)
+    with frontier size f, versus the old all-pairs O(n²) scan that stalled
+    10k-record sweeps.  Duplicate metric vectors are all kept (none dominates
+    the other).
     """
     vecs = [_oriented(m, objectives) for m in metric_dicts]
-    return [
-        i
-        for i, vi in enumerate(vecs)
-        if not any(j != i and _vec_dominates(vj, vi) for j, vj in enumerate(vecs))
-    ]
+    order = sorted(range(len(vecs)), key=vecs.__getitem__, reverse=True)
+    front: list[int] = []
+    front_vecs: list[tuple[float, ...]] = []
+    for i in order:
+        vi = vecs[i]
+        if not any(_vec_dominates(vj, vi) for vj in front_vecs):
+            front.append(i)
+            front_vecs.append(vi)
+    return sorted(front)
 
 
 def top_k(ranked: Sequence[RankedConfig], k: int = 5) -> list[RankedConfig]:

@@ -25,9 +25,11 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import Sequence
 
 from ..core.address import KernelSpec
 from ..core.bankconflict import block_l1_cycles
+from ..core.estimator import EstimateCache
 from ..core.machine import V100, GPUMachine
 from ..core.waves import interior_block_box
 
@@ -59,19 +61,33 @@ def sanity_reason(spec: KernelSpec, machine: GPUMachine = V100) -> str | None:
     return None
 
 
-def upper_bound_glups(spec: KernelSpec, machine: GPUMachine = V100) -> float:
+def _l1_cycles(spec: KernelSpec, blk, cache: EstimateCache | None) -> int:
+    """Exact interior-block bank-conflict cycles, through the shared estimate
+    cache when one is given — the full estimate's L1 stage later hits the same
+    (accesses, block box) entry instead of recomputing."""
+    if cache is None:
+        return block_l1_cycles(spec.accesses, blk)
+    return cache.l1_cycles(spec.accesses, blk)
+
+
+def upper_bound_glups(
+    spec: KernelSpec, machine: GPUMachine = V100, cache: EstimateCache | None = None
+) -> float:
     """Optimistic GLUPs: max of per-LUP limiter times, each term a lower bound.
 
     DRAM term assumes perfect caching (compulsory traffic only); the L1 term is
     the *exact* bank-conflict cycle count (identical to the full model's term);
-    the FP term is exact.  The L2 term is omitted (bounded below by the DRAM
-    term's compulsory volume at higher bandwidth, hence never the max here).
+    the FP term is exact — against the FP peak of the *kernel's own dtype*
+    (``machine.peak_fp``), matching the full model so the bound stays a true
+    upper bound for fp32 kernels too.  The L2 term is omitted (bounded below by
+    the DRAM term's compulsory volume at higher bandwidth, hence never the max
+    here).
     """
     blk = interior_block_box(spec.launch)
     blk_lups = max(1, blk.count * spec.lups_per_thread)
-    t_l1 = block_l1_cycles(spec.accesses, blk) / blk_lups / (machine.n_sm * machine.clock_hz)
+    t_l1 = _l1_cycles(spec, blk, cache) / blk_lups / (machine.n_sm * machine.clock_hz)
     t_dram = compulsory_bytes_per_lup(spec) / machine.bw_dram
-    t_fp = spec.flops_per_lup / machine.peak_fp64
+    t_fp = spec.flops_per_lup / machine.peak_fp(spec.element_size)
     t = max(t_l1, t_dram, t_fp)
     return 1.0 / t / 1e9 if t > 0 else float("inf")
 
@@ -86,6 +102,9 @@ class PruneReport:
     bound_dropped: int = 0
     best_bound: float = 0.0
     cutoff_bound: float = 0.0
+    # input positions of the kept configs (in order) — lets the engine align
+    # prebuilt specs with the surviving candidate list without rebuilding
+    kept_indices: list = field(default_factory=list)
 
     @property
     def dropped(self) -> int:
@@ -109,26 +128,34 @@ def prune_configs(
     machine: GPUMachine = V100,
     keep_fraction: float = 0.5,
     min_keep: int = 16,
+    specs: Sequence[KernelSpec] | None = None,
+    cache: EstimateCache | None = None,
 ) -> tuple[list[dict], PruneReport]:
     """Drop sanity-violating configs, then keep the top ``keep_fraction`` by
-    optimistic roofline bound (at least ``min_keep``).  Preserves input order."""
+    optimistic roofline bound (at least ``min_keep``).  Preserves input order.
+
+    ``specs`` (aligned with ``configs``) skips rebuilding specs the caller
+    already has; ``cache`` shares the bound's bank-conflict cycles with the
+    subsequent full estimates (the engine passes both).
+    """
     report = PruneReport(total=len(configs))
     survivors: list[tuple[int, dict, float]] = []
     for i, cfg in enumerate(configs):
-        spec = build(**cfg)
+        spec = specs[i] if specs is not None else build(**cfg)
         reason = sanity_reason(spec, machine)
         if reason is not None:
             report.sanity_dropped[reason] = report.sanity_dropped.get(reason, 0) + 1
             continue
-        survivors.append((i, cfg, upper_bound_glups(spec, machine)))
+        survivors.append((i, cfg, upper_bound_glups(spec, machine, cache=cache)))
     if not survivors:
         return [], report
     report.best_bound = max(b for _, _, b in survivors)
     n_keep = min(len(survivors), max(min_keep, math.ceil(keep_fraction * len(survivors))))
     cutoff = sorted((b for _, _, b in survivors), reverse=True)[n_keep - 1]
     report.cutoff_bound = cutoff
-    kept = [(i, cfg) for i, cfg, b in survivors if b >= cutoff]
+    kept = sorted((i, cfg) for i, cfg, b in survivors if b >= cutoff)
     # bound ties can push us past n_keep; that is fine (never drops a tied config)
     report.bound_dropped = len(survivors) - len(kept)
     report.kept = len(kept)
-    return [cfg for _, cfg in sorted(kept)], report
+    report.kept_indices = [i for i, _ in kept]
+    return [cfg for _, cfg in kept], report

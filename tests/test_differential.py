@@ -29,6 +29,8 @@ import pytest
 from repro.core import appspec, estimator, exactcount
 from repro.core.machine import gpu_machines
 
+pytestmark = pytest.mark.slow  # LRU simulations; excluded from the fast lane
+
 SEED = 20260729
 N_PER_KERNEL = 2
 # smaller-than-paper grids keep each LRU simulation at a few seconds while

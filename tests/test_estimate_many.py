@@ -1,0 +1,108 @@
+"""Property tests for the batched estimation fast path (core/estimator.py).
+
+The contract: ``estimate_many`` runs the same §III pipeline as per-config
+``estimate`` through cached, vectorized primitives — results must agree
+*bit-for-bit* (not approximately) over randomized stencil25 / LBM
+configurations on every machine model, with and without a shared
+:class:`EstimateCache`, for both footprint methods.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency; pip install -r requirements-dev.txt")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import appspec, estimator
+from repro.core.bankconflict import block_l1_cycles, block_l1_cycles_fast
+from repro.core.footprint import warp_requested_bytes, warp_requested_bytes_fast
+from repro.core.machine import A100_40GB, V100
+from repro.core.waves import interior_block_box
+
+GRID = (128, 64, 64)  # reduced grid keeps each full estimate cheap
+
+STENCIL_CFGS = appspec.stencil_config_space()
+LBM_CFGS = appspec.lbm_config_space()
+
+machines = st.sampled_from([V100, A100_40GB])
+stencil_picks = st.lists(
+    st.sampled_from(STENCIL_CFGS), min_size=1, max_size=4, unique_by=str
+)
+lbm_picks = st.lists(st.sampled_from(LBM_CFGS), min_size=1, max_size=4, unique_by=str)
+
+
+def _specs(build, cfgs):
+    return [build(block=c["block"], fold=c["fold"], grid=GRID) for c in cfgs]
+
+
+def _assert_bitwise_equal(ref, got):
+    for r, g in zip(ref, got):
+        assert dataclasses.asdict(r) == dataclasses.asdict(g)
+
+
+@given(stencil_picks, machines)
+@settings(max_examples=25, deadline=None)
+def test_stencil_batch_equals_per_config_bitwise(cfgs, machine):
+    specs = _specs(appspec.star3d, cfgs)
+    ref = [estimator.estimate(s, machine, method="sym") for s in specs]
+    _assert_bitwise_equal(ref, estimator.estimate_many(specs, machine, method="sym"))
+
+
+@given(lbm_picks, machines)
+@settings(max_examples=25, deadline=None)
+def test_lbm_batch_equals_per_config_bitwise(cfgs, machine):
+    specs = _specs(appspec.lbm_d3q15, cfgs)
+    ref = [estimator.estimate(s, machine, method="sym") for s in specs]
+    _assert_bitwise_equal(ref, estimator.estimate_many(specs, machine, method="sym"))
+
+
+@given(stencil_picks)
+@settings(max_examples=10, deadline=None)
+def test_enum_method_batch_equals_per_config_bitwise(cfgs):
+    specs = _specs(appspec.star3d, cfgs)
+    ref = [estimator.estimate(s, V100, method="enum") for s in specs]
+    _assert_bitwise_equal(ref, estimator.estimate_many(specs, V100, method="enum"))
+
+
+@given(stencil_picks)
+@settings(max_examples=10, deadline=None)
+def test_shared_cache_across_machines_stays_bitwise(cfgs):
+    """One cache serving several machines (the crossmachine.compare pattern)
+    must never leak one machine's sub-results into another's estimates."""
+    specs = _specs(appspec.star3d, cfgs)
+    cache = estimator.EstimateCache()
+    for machine in (V100, A100_40GB):
+        ref = [estimator.estimate(s, machine, method="sym") for s in specs]
+        got = estimator.estimate_many(specs, machine, method="sym", cache=cache)
+        _assert_bitwise_equal(ref, got)
+    # the second machine reused at least the machine-independent L1 block work
+    assert cache.hits > 0
+
+
+@given(st.sampled_from(STENCIL_CFGS))
+@settings(max_examples=30, deadline=None)
+def test_fast_l1_primitives_match_reference(cfg):
+    spec = appspec.star3d(block=cfg["block"], fold=cfg["fold"], grid=GRID)
+    blk = interior_block_box(spec.launch)
+    assert block_l1_cycles_fast(spec.accesses, blk) == block_l1_cycles(
+        spec.accesses, blk
+    )
+    for stores in (False, True):
+        assert warp_requested_bytes_fast(
+            spec.accesses, blk, 32, stores=stores
+        ) == warp_requested_bytes(spec.accesses, blk, 32, stores=stores)
+
+
+def test_estimate_many_accepts_config_dicts_with_build():
+    cfgs = STENCIL_CFGS[:3]
+    specs = _specs(appspec.star3d, cfgs)
+    via_specs = estimator.estimate_many(specs, V100)
+    via_cfgs = estimator.estimate_many(
+        [dict(c, grid=GRID) for c in cfgs], V100, build=appspec.star3d
+    )
+    _assert_bitwise_equal(via_specs, via_cfgs)
+    with pytest.raises(TypeError, match="no build"):
+        estimator.estimate_many([{"block": (32, 8, 4)}], V100)

@@ -300,6 +300,83 @@ def test_sweep_pareto_contains_best(tmp_path):
     assert res.records[0].config in [r.config for r in front]
 
 
+def _tpu_configs_one_infeasible():
+    """Two Pallas candidates: one feasible, one far beyond the VMEM gate.
+
+    The huge-block candidate minimizes HBM refetches, so it can look
+    attractive on the non-time objectives — ``feasible=False`` must exclude
+    it from every recommendation surface regardless.
+    """
+    from repro.core import tpu_estimator as te
+
+    def cfg(name, bz):
+        return te.PallasConfig(
+            name=name,
+            grid=(256 // bz,),
+            accesses=(
+                te.BlockAccess(
+                    name="x",
+                    block_shape=(bz, 4096, 128),
+                    index_map=lambda i: (i, 0, 0),
+                    dtype_bits=32,
+                ),
+            ),
+            flops_per_step=1.0,
+            is_matmul=False,
+            meta={"bz": bz},
+        )
+
+    return [cfg("small", 8), cfg("huge", 256)]
+
+
+def test_infeasible_tpu_config_never_reaches_pareto_or_top():
+    from repro.core import tpu_estimator as te
+    from repro.core.machine import TPU_V5E
+
+    cands = _tpu_configs_one_infeasible()
+    ests = {c.name: te.estimate(c, TPU_V5E) for c in cands}
+    assert ests["small"].feasible and not ests["huge"].feasible
+
+    res = sweep("stencil25_tpu", configs=cands)
+    assert len(res.records) == 2  # infeasible stays in records for accounting
+    assert {r.config["name"] for r in res.pareto()} == {"small"}
+    assert {r.config["name"] for r in res.top(5)} == {"small"}
+
+
+def test_tpu_store_key_distinguishes_block_specs(tmp_path):
+    """Two PallasConfigs identical in name+meta but different in block shapes
+    must occupy separate store entries — the old key hashed only
+    ``{"name", **meta}`` and silently aliased them."""
+    from repro.core import tpu_estimator as te
+
+    def cfg(block_q):
+        return te.PallasConfig(
+            name="attn",  # same name...
+            grid=(64,),
+            accesses=(
+                te.BlockAccess(
+                    name="q",
+                    block_shape=(block_q, 128),
+                    index_map=lambda i: (i, 0),
+                    dtype_bits=32,
+                ),
+            ),
+            flops_per_step=1.0,
+            meta={},  # ...and same (empty) meta
+        )
+
+    p = tmp_path / "tpu.jsonl"
+    first = sweep("attention_tpu", configs=[cfg(128)], store=p)
+    assert first.stats.evaluated == 1
+    second = sweep("attention_tpu", configs=[cfg(256)], store=p)
+    # different block shape -> different key -> a real evaluation, not an alias
+    assert second.stats.evaluated == 1 and second.stats.cache_hits == 0
+    assert second.records[0].metrics != first.records[0].metrics
+    # and re-running either config is still a cache hit
+    again = sweep("attention_tpu", configs=[cfg(256)], store=p)
+    assert again.stats.cache_hits == 1 and again.stats.evaluated == 0
+
+
 # --------------------------------------------------------------------------- #
 # machine registry + cross-machine comparison
 

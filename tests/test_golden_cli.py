@@ -24,6 +24,8 @@ import pytest
 
 from repro.explore import cli
 
+pytestmark = pytest.mark.slow  # full-space CLI sweeps; excluded from the fast lane
+
 GOLDEN_DIR = Path(__file__).parent / "golden"
 REGEN = os.environ.get("REPRO_REGEN_GOLDEN") == "1"
 

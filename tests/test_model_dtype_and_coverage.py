@@ -1,0 +1,97 @@
+"""Regression tests for two estimator/model correctness fixes:
+
+* dtype-aware FP roofline — fp32 kernels (``element_size=4``) were predicted
+  against the fp64 peak; the FP term must use the peak of the kernel's own
+  precision on every layer that computes it (model, phenomenological
+  prediction, prune bound);
+* ``l2_coverage`` range — the reported mean coverage factor is documented as
+  lying in [0, 1], but a wave whose footprint alone overflows L2 produced a
+  negative value (no lower clamp on the per-wave term).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.core import appspec, estimator, model
+from repro.core.machine import A100_40GB, H100_SXM, V100
+from repro.explore.prune import upper_bound_glups
+
+GRID = (128, 64, 64)
+
+
+# --------------------------------------------------------------------------- #
+# dtype-aware FP roofline
+
+
+def test_peak_fp_picks_dtype_specific_peak():
+    for m in (V100, A100_40GB, H100_SXM):
+        assert m.peak_fp(8) == m.peak_fp64
+        assert m.peak_fp(4) == m.peak_fp32
+        assert m.peak_fp32 > m.peak_fp64
+
+
+def test_spec_element_size_reports_widest_field():
+    assert appspec.star3d(block=(32, 8, 4), grid=GRID).element_size == 8
+    assert appspec.star3d(block=(32, 8, 4), grid=GRID, element_size=4).element_size == 4
+
+
+def test_fp32_spec_predicted_against_fp32_peak():
+    blk = (32, 8, 4)
+    fp64 = appspec.star3d(block=blk, grid=GRID)
+    fp32 = appspec.star3d(block=blk, grid=GRID, element_size=4)
+    est64 = estimator.estimate(fp64, V100)
+    est32 = estimator.estimate(fp32, V100)
+    p64 = model.predict(fp64, est64, V100)
+    p32 = model.predict(fp32, est32, V100)
+    assert p64.t_fp == est64.flops * fp64.total_lups / V100.peak_fp64
+    assert p32.t_fp == est32.flops * fp32.total_lups / V100.peak_fp32
+    # identical flops at double the peak: exactly half the FP time
+    assert p32.t_fp == pytest.approx(p64.t_fp * V100.peak_fp64 / V100.peak_fp32)
+
+
+def test_predict_from_volumes_element_size():
+    kw = dict(lups=1000, v_dram=24.0, v_l2=40.0, l1_cycles=1.5, flops=49.0)
+    assert model.predict_from_volumes(**kw).t_fp == 49.0 * 1000 / V100.peak_fp64
+    assert (
+        model.predict_from_volumes(**kw, element_size=4).t_fp
+        == 49.0 * 1000 / V100.peak_fp32
+    )
+
+
+def test_prune_bound_stays_true_upper_bound_for_fp32():
+    """The bound and the model must pick the FP peak the same way, or an
+    fp32 kernel's bound (vs fp64 peak) could fall below its prediction."""
+    for element_size in (4, 8):
+        for block in [(256, 4, 1), (16, 8, 8)]:
+            spec = appspec.star3d(block=block, element_size=element_size)
+            est = estimator.estimate(spec)
+            pred = model.predict(spec, est)
+            assert upper_bound_glups(spec, V100) >= pred.glups
+
+
+# --------------------------------------------------------------------------- #
+# l2_coverage clamp
+
+
+def _overflowing_machine():
+    """A machine whose L2 is smaller than any stencil wave footprint, forcing
+    the per-wave coverage factor C negative before the clamp."""
+    return dataclasses.replace(V100, l2_bytes=64 * 1024)
+
+
+def test_l2_coverage_clamped_when_wave_overflows_l2():
+    spec = appspec.star3d(block=(32, 8, 4))
+    machine = _overflowing_machine()
+    est = estimator.estimate(spec, machine)
+    assert 0.0 <= est.l2_coverage <= 1.0
+    # the overflow really happened: everything the waves share is re-fetched
+    assert est.v_dram_load_overlap_miss > 0.0
+
+
+def test_l2_coverage_stays_in_documented_range_across_space():
+    for cfg in appspec.stencil_config_space()[::17]:
+        spec = appspec.star3d(block=cfg["block"], fold=cfg["fold"], grid=GRID)
+        est = estimator.estimate(spec, V100)
+        assert 0.0 <= est.l2_coverage <= 1.0
