@@ -252,7 +252,11 @@ def sweep_throughput():
       * cold_cfg_per_s     — ``sweep(store=None)`` through the batched
         ``estimate_many`` fast path, nothing cached,
       * warm_cfg_per_s     — the same sweep re-run against a fully populated
-        persistent store (every config a cache hit).
+        persistent store (every config a cache hit),
+      * store_load_*       — load wall time of a large (~20k-line) JSONL
+        store: eager serial parse vs the default lazy key-scan load (payloads
+        parse on first hit) — the warm-path bound once every estimate is a
+        cache hit.
 
     Each measurement is the best of ``reps`` runs (min wall time).  The JSON
     artifact starts the perf trajectory for the engine: ``speedup_cold`` is
@@ -262,6 +266,7 @@ def sweep_throughput():
 
     from repro.core import appspec, estimator
     from repro.explore import sweep
+    from repro.explore.store import ResultStore
 
     kernel, reps = "stencil25", 2
     cfgs = appspec.stencil_config_space()
@@ -284,6 +289,19 @@ def sweep_throughput():
         store = os.path.join(d, f"{kernel}.jsonl")
         sweep(kernel, store=store)  # populate
         t_warm, warm = best_of(lambda: sweep(kernel, store=store))
+        # warm-path store load at scale: replicate the real records (re-keyed)
+        # to ~20k lines and time eager serial parse vs the lazy key-scan load
+        with open(store) as f:
+            recs = [json.loads(line) for line in f if line.strip()]
+        big = os.path.join(d, "big.jsonl")
+        n_rep = max(1, ResultStore.PARALLEL_MIN_LINES // max(len(recs), 1) + 1)
+        with open(big, "w") as f:
+            for rep in range(n_rep):
+                for r in recs:
+                    f.write(json.dumps({**r, "key": f"{rep}|{r['key']}"}) + "\n")
+        n_lines = n_rep * len(recs)
+        t_load_serial, _ = best_of(lambda: ResultStore(big, load_workers=0))
+        t_load_lazy, _ = best_of(lambda: ResultStore(big))  # lazy key-scan
     n = len(cfgs)
     payload = {
         "kernel": kernel,
@@ -297,6 +315,10 @@ def sweep_throughput():
         "speedup_cold": t_base / t_cold,
         "speedup_warm": t_base / t_warm,
         "warm_cache_hits": warm.stats.cache_hits,
+        "store_load_lines": n_lines,
+        "store_load_serial_s": t_load_serial,
+        "store_load_lazy_s": t_load_lazy,
+        "store_load_speedup": t_load_serial / max(t_load_lazy, 1e-9),
     }
     with open("BENCH_sweep.json", "w") as f:
         json.dump(payload, f, indent=2)
@@ -305,7 +327,8 @@ def sweep_throughput():
         f"base={payload['baseline_cfg_per_s']:.0f}cfg/s "
         f"cold={payload['cold_cfg_per_s']:.0f}cfg/s "
         f"warm={payload['warm_cfg_per_s']:.0f}cfg/s "
-        f"speedup_cold={payload['speedup_cold']:.1f}x"
+        f"speedup_cold={payload['speedup_cold']:.1f}x "
+        f"store_load={n_lines}ln {payload['store_load_speedup']:.1f}x"
     )
     return "sweep_throughput", t_cold * 1e6, derived
 

@@ -2,7 +2,18 @@
 
 These builders play the role of pystencils/lbmpy: for a given application and
 configuration (block size, thread folding) they emit the address expressions the
-estimator consumes (paper §I.B).  Two applications from the paper §IV:
+estimator consumes (paper §I.B).  Since the AccessIR refactor each builder comes
+in two layers:
+
+* ``*_ir``   — emits the canonical :class:`~repro.frontend.ir.AccessIR`
+  (fields + affine address expressions + launch geometry), the form the
+  exploration engine fingerprints for store keys;
+* the classic name (``star3d``, ``lbm_d3q15``) — lowers that IR to the GPU
+  estimator's :class:`~repro.core.address.KernelSpec`.  The lowering is
+  positional, so the specs are bit-identical to the pre-IR hand-written
+  builders (differential-tested in ``tests/test_ir_lowering.py``).
+
+Two applications from the paper §IV:
 
 * ``star3d``    — range-4 3D25pt star stencil (§IV.C), grid 640x512x512, DP.
 * ``lbm_d3q15`` — conservative Allen-Cahn multi-phase LBM interface-tracking kernel
@@ -11,16 +22,10 @@ estimator consumes (paper §I.B).  Two applications from the paper §IV:
 from __future__ import annotations
 
 import math
-from typing import Sequence
 
-from .address import (
-    Access,
-    Field,
-    KernelSpec,
-    LaunchConfig,
-    dedupe_accesses,
-    fold_accesses,
-)
+from ..frontend.ir import AccessIR, IRAccess, IRField, dedupe_ir, fold_ir
+from ..frontend.lower import lower_gpu
+from .address import KernelSpec
 
 # D3Q15 velocity set: rest + 6 face + 8 corner directions.
 D3Q15_DIRS: tuple[tuple[int, int, int], ...] = (
@@ -53,6 +58,42 @@ def _star_offsets(r: int) -> list[tuple[int, int, int]]:
     return offs
 
 
+def star3d_ir(
+    block: tuple[int, int, int],
+    fold: tuple[int, int, int] = (1, 1, 1),
+    r: int = 4,
+    grid: tuple[int, int, int] = STENCIL_GRID,
+    element_size: int = 8,
+) -> AccessIR:
+    """AccessIR of the range-r 3D star stencil ``dst[p] = sum(w_i * src[p + o_i])``."""
+    gx, gy, gz = grid
+    src = IRField("src", (gx, gy, gz), dtype_bits=8 * element_size, alignment=0)
+    dst = IRField("dst", (gx, gy, gz), dtype_bits=8 * element_size, alignment=32)
+    sx, sy, sz = 1, gx, gx * gy  # x-fastest element strides
+    accesses: list[IRAccess] = []
+    for (ox, oy, oz) in _star_offsets(r):
+        accesses.append(
+            IRAccess("src", (sx, sy, sz), ox * sx + oy * sy + oz * sz)
+        )
+    accesses.append(IRAccess("dst", (sx, sy, sz), 0, is_store=True))
+    folded = dedupe_ir(fold_ir(accesses, fold))
+    fx, fy, fz = fold
+    # 25 pts -> 25 mul + 24 add = 49 flops; paper quotes "25 floating point
+    # operations" (FMA counting); use FMA flops = 2*25 - 1 per LUP for the FP term.
+    npts = 6 * r + 1
+    return AccessIR(
+        name=f"star3d_r{r}",
+        fields=(src, dst),
+        accesses=folded,
+        iter_shape=(gx // fx, gy // fy, gz // fz),
+        block=tuple(block),
+        lups_per_iter=fx * fy * fz,
+        flops_per_iter=2 * npts - 1,
+        regs_per_thread=64,
+        meta={"fold": fold, "grid": grid, "app": "stencil"},
+    )
+
+
 def star3d(
     block: tuple[int, int, int],
     fold: tuple[int, int, int] = (1, 1, 1),
@@ -60,43 +101,19 @@ def star3d(
     grid: tuple[int, int, int] = STENCIL_GRID,
     element_size: int = 8,
 ) -> KernelSpec:
-    """Range-r 3D star stencil ``dst[p] = sum(w_i * src[p + o_i])`` (25pt for r=4)."""
-    gx, gy, gz = grid
-    src = Field("src", (gx, gy, gz), element_size, alignment=0)
-    dst = Field("dst", (gx, gy, gz), element_size, alignment=32)
-    sx, sy, sz = src.strides
-    accesses: list[Access] = []
-    for (ox, oy, oz) in _star_offsets(r):
-        accesses.append(
-            Access(src, coeffs=(sx, sy, sz), offset=ox * sx + oy * sy + oz * sz)
-        )
-    accesses.append(Access(dst, coeffs=(sx, sy, sz), offset=0, is_store=True))
-    accesses = list(fold_accesses(accesses, fold))
-    accesses = list(dedupe_accesses(accesses))
-    fx, fy, fz = fold
-    threads = (gx // fx, gy // fy, gz // fz)
-    # 25 pts -> 25 mul + 24 add = 49 flops; paper quotes "25 floating point
-    # operations" (FMA counting); use FMA flops = 2*25 - 1 per LUP for the FP term.
-    npts = 6 * r + 1
-    return KernelSpec(
-        name=f"star3d_r{r}",
-        fields=(src, dst),
-        accesses=tuple(accesses),
-        launch=LaunchConfig(block=block, threads=threads),
-        lups_per_thread=fx * fy * fz,
-        flops_per_lup=2 * npts - 1,
-        regs_per_thread=64,
-        meta={"fold": fold, "grid": grid, "app": "stencil"},
+    """Range-r 3D star stencil (25pt for r=4), lowered for the GPU estimator."""
+    return lower_gpu(
+        star3d_ir(block=block, fold=fold, r=r, grid=grid, element_size=element_size)
     )
 
 
-def lbm_d3q15(
+def lbm_d3q15_ir(
     block: tuple[int, int, int],
     fold: tuple[int, int, int] = (1, 1, 1),
     grid: tuple[int, int, int] = LBM_GRID,
     element_size: int = 8,
-) -> KernelSpec:
-    """Allen-Cahn interface-tracking LBM kernel (paper §IV.D).
+) -> AccessIR:
+    """AccessIR of the Allen-Cahn interface-tracking LBM kernel (paper §IV.D).
 
     Structure (per lattice update):
       * 15 pdf loads, *pull* scheme: load f_q from (p - c_q) -> unaligned loads;
@@ -111,38 +128,48 @@ def lbm_d3q15(
     """
     gx, gy, gz = grid
     vol = gx * gy * gz
-    fsrc = Field("pdf_src", (gx, gy, gz), element_size, alignment=0, components=15)
-    fdst = Field("pdf_dst", (gx, gy, gz), element_size, alignment=32, components=15)
-    phase = Field("phase", (gx, gy, gz), element_size, alignment=64)
-    phase_dst = Field("phase_dst", (gx, gy, gz), element_size, alignment=96)
-    sx, sy, sz = fsrc.strides
-    accesses: list[Access] = []
+    bits = 8 * element_size
+    fsrc = IRField("pdf_src", (gx, gy, gz), bits, alignment=0, components=15)
+    fdst = IRField("pdf_dst", (gx, gy, gz), bits, alignment=32, components=15)
+    phase = IRField("phase", (gx, gy, gz), bits, alignment=64)
+    phase_dst = IRField("phase_dst", (gx, gy, gz), bits, alignment=96)
+    sx, sy, sz = 1, gx, gx * gy
+    accesses: list[IRAccess] = []
     for q, (cx, cy, cz) in enumerate(D3Q15_DIRS):
         # pull: f_q(p) <- f_q(p - c_q)
         off = q * vol - (cx * sx + cy * sy + cz * sz)
-        accesses.append(Access(fsrc, coeffs=(sx, sy, sz), offset=off))
+        accesses.append(IRAccess("pdf_src", (sx, sy, sz), off))
     for q in range(15):
-        accesses.append(
-            Access(fdst, coeffs=(sx, sy, sz), offset=q * vol, is_store=True)
-        )
+        accesses.append(IRAccess("pdf_dst", (sx, sy, sz), q * vol, is_store=True))
     for (ox, oy, oz) in _star_offsets(1):  # 3D7pt FD stencil on the phase field
         accesses.append(
-            Access(phase, coeffs=(sx, sy, sz), offset=ox * sx + oy * sy + oz * sz)
+            IRAccess("phase", (sx, sy, sz), ox * sx + oy * sy + oz * sz)
         )
-    accesses.append(Access(phase_dst, coeffs=(sx, sy, sz), offset=0, is_store=True))
-    accesses = list(fold_accesses(accesses, fold))
-    accesses = list(dedupe_accesses(accesses))
+    accesses.append(IRAccess("phase_dst", (sx, sy, sz), 0, is_store=True))
+    folded = dedupe_ir(fold_ir(accesses, fold))
     fx, fy, fz = fold
-    threads = (gx // fx, gy // fy, gz // fz)
-    return KernelSpec(
+    return AccessIR(
         name="lbm_d3q15_allen_cahn",
         fields=(fsrc, fdst, phase, phase_dst),
-        accesses=tuple(accesses),
-        launch=LaunchConfig(block=block, threads=threads),
-        lups_per_thread=fx * fy * fz,
-        flops_per_lup=350.0,  # collision + curvature FD; never the limiter (§III.A)
+        accesses=folded,
+        iter_shape=(gx // fx, gy // fy, gz // fz),
+        block=tuple(block),
+        lups_per_iter=fx * fy * fz,
+        flops_per_iter=350.0,  # collision + curvature FD; never the limiter (§III.A)
         regs_per_thread=128,  # register pressure limits blocks to 512 threads (§IV.B)
         meta={"fold": fold, "grid": grid, "app": "lbm"},
+    )
+
+
+def lbm_d3q15(
+    block: tuple[int, int, int],
+    fold: tuple[int, int, int] = (1, 1, 1),
+    grid: tuple[int, int, int] = LBM_GRID,
+    element_size: int = 8,
+) -> KernelSpec:
+    """Allen-Cahn LBM kernel (paper §IV.D), lowered for the GPU estimator."""
+    return lower_gpu(
+        lbm_d3q15_ir(block=block, fold=fold, grid=grid, element_size=element_size)
     )
 
 

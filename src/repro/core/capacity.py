@@ -38,7 +38,10 @@ class Sigmoid:
 
     def __call__(self, x):
         x = np.asarray(x, dtype=np.float64)
-        out = self.a * np.exp(-self.b * np.exp(-self.c * (x - self.x0)))
+        # far-tail inputs overflow the inner exp; exp(-inf) == 0 is the exact
+        # limit value, so the result is right — only the warning is noise
+        with np.errstate(over="ignore"):
+            out = self.a * np.exp(-self.b * np.exp(-self.c * (x - self.x0)))
         return float(out) if out.ndim == 0 else out
 
 

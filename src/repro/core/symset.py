@@ -155,6 +155,11 @@ def _access_intervals(
     if abs(cx) == 1:
         # contiguous run per row: exact interval of touched lines
         return lo // granularity, hi_incl // granularity + 1
+    if cx == 0:
+        # x-invariant access: every x reads the same es-wide run per row, so
+        # the x1-x0 duplicate intervals the generic branch would emit collapse
+        # to one (identical merged set, evaluated in O(rows))
+        return row_base // granularity, (row_base + es - 1) // granularity + 1
     # strided x: enumerate x offsets, one (possibly 1-line) interval per element
     xs = np.arange(x0, x1, dtype=np.int64)
     addr = (row_base[:, None] + (cx * xs * es)[None, :]).ravel()
@@ -263,11 +268,37 @@ def _group_intervals(
         lo = (base[:, None] + run_lo[None, :]).ravel()
         hi_incl = (base[:, None] + run_hi[None, :]).ravel()
         return lo // granularity, hi_incl // granularity + 1
-    # strided x: enumerate x offsets, one (possibly 1-line) interval per element
-    row_base = access.field.alignment + (offsets[:, None] * es + inner[None, :]).ravel()
-    xs = np.arange(x0, x1, dtype=np.int64)
-    addr = (row_base[:, None] + (cx * xs * es)[None, :]).ravel()
-    return addr // granularity, (addr + es - 1) // granularity + 1
+    # strided x: merge the group's offset runs in byte space first, then either
+    # collapse the x dimension symbolically (when the merged run is at least as
+    # wide as the x stride, consecutive x steps tile a contiguous range — the
+    # row-major panel case: offsets 0..d-1 with cx == d) or enumerate the
+    # remaining sparse runs.  Both produce the reference's merged set exactly.
+    runs = _merge_scalar_runs(
+        [int(o) * es for o in offsets], [int(o) * es + es - 1 for o in offsets]
+    )
+    stride = abs(cx) * es
+    base = access.field.alignment + inner
+    los: list[np.ndarray] = []
+    his: list[np.ndarray] = []
+    xs = None
+    for lo, hi in runs:
+        if stride <= (hi - lo + 1) + 1:
+            # union over x of [lo + cx*es*x, hi + cx*es*x] is one interval
+            if cx > 0:
+                los.append(base + (lo + cx * es * x0))
+                his.append(base + (hi + cx * es * (x1 - 1)))
+            else:
+                los.append(base + (lo + cx * es * (x1 - 1)))
+                his.append(base + (hi + cx * es * x0))
+        else:
+            if xs is None:
+                xs = np.arange(x0, x1, dtype=np.int64)
+            shifted = base[:, None] + (cx * xs * es)[None, :]
+            los.append((shifted + lo).ravel())
+            his.append((shifted + hi).ravel())
+    lo_all = np.concatenate(los)
+    hi_all = np.concatenate(his)
+    return lo_all // granularity, hi_all // granularity + 1
 
 
 def field_interval_sets_grouped(

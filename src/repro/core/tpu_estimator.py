@@ -4,7 +4,18 @@ The GPU estimator predicts cache-hierarchy traffic from per-thread address
 expressions.  On TPU the memory hierarchy is software-managed, so the analogous
 high-level artifacts a code generator has *before emitting code* are the Pallas
 ``BlockSpec``s: block shapes plus affine ``index_map`` functions from grid
-coordinates to block offsets.  From these we estimate, per candidate configuration:
+coordinates to block offsets.  Since the AccessIR refactor the estimator
+consumes the canonical IR:
+
+* :func:`estimate_ir` — the model proper, over a block-granular
+  :class:`~repro.frontend.ir.AccessIR` (affine index maps as coefficient
+  matrices; picklable, closure-free);
+* :func:`estimate` — convenience wrapper for :class:`PallasConfig`: traces the
+  config through :func:`repro.frontend.pallas.trace_pallas` (which rejects
+  non-affine ``index_map`` closures with a clear
+  :class:`~repro.frontend.pallas.NonAffineIndexMapError`) and estimates the IR.
+
+Per candidate configuration we estimate:
 
   * HBM->VMEM transfer volume, split into compulsory (unique blocks, the paper's
     V_comp) and redundant refetch volume (the paper's V_red) using the Pallas
@@ -27,6 +38,8 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from ..frontend.ir import AccessIR
+from ..frontend.pallas import trace_pallas
 from .machine import TPU_V5E, TPUMachine
 
 
@@ -58,12 +71,12 @@ class PallasConfig:
         return int(np.prod(self.grid)) if self.grid else 1
 
 
-def _grid_walk(grid: tuple[int, ...]) -> list[np.ndarray]:
-    """Grid coordinates for every step in Pallas order (last dim fastest)."""
+def _grid_walk(grid: tuple[int, ...]) -> np.ndarray | None:
+    """Grid coordinates for every step in Pallas order (last dim fastest),
+    stacked as a (dims, steps) matrix."""
     if not grid:
-        return []
-    idx = np.indices(grid).reshape(len(grid), -1)
-    return [idx[d] for d in range(len(grid))]
+        return None
+    return np.indices(grid).reshape(len(grid), -1)
 
 
 def _tile_padded(shape: Sequence[int], dtype_bits: int, m: TPUMachine) -> int:
@@ -117,30 +130,35 @@ class TPUEstimate:
 GRID_STEP_OVERHEAD_S = 2e-7  # per-step sequencer floor (mostly hidden by pipelining)
 
 
-def estimate(cfg: PallasConfig, machine: TPUMachine = TPU_V5E) -> TPUEstimate:
-    coords = _grid_walk(cfg.grid)
+def estimate_ir(ir: AccessIR, machine: TPUMachine = TPU_V5E) -> TPUEstimate:
+    """The TPU model over the canonical IR (block-granular accesses)."""
+    if ir.accesses and ir.granularity != "block":
+        raise ValueError(
+            f"IR {ir.name!r} is element-granular (GPU-space); lower it with "
+            "frontend.lower.lower_gpu and run the paper §III estimator instead"
+        )
+    coords = _grid_walk(ir.iter_shape)
+    steps = ir.steps
+    fields = ir.field_map
     detail: dict = {}
-    vmem = cfg.scratch_bytes
+    vmem = ir.scratch_bytes
     hbm_total = 0.0
     hbm_comp = 0.0
     useful = 0.0
     padded_total = 0.0
-    for acc in cfg.accesses:
-        esize = acc.dtype_bits / 8
-        block_elems = int(np.prod(acc.block_shape))
-        padded_elems = _tile_padded(acc.block_shape, acc.dtype_bits, machine)
+    for acc in ir.accesses:
+        dtype_bits = fields[acc.field].dtype_bits
+        esize = dtype_bits / 8
+        block_elems = int(np.prod(acc.tile)) if acc.tile else 1
+        padded_elems = _tile_padded(acc.tile, dtype_bits, machine)
         block_bytes = block_elems * esize
         padded_bytes = padded_elems * esize
         # double buffering: Pallas overlaps the next block's DMA with compute
         vmem += 2 * int(padded_bytes)
-        if coords:
-            n_steps = coords[0].size
-            bidx = np.stack(
-                [
-                    np.broadcast_to(np.asarray(c, dtype=np.int64), (n_steps,))
-                    for c in acc.index_map(*coords)
-                ]
-            )
+        if coords is not None:
+            mat = np.asarray(acc.coeffs, dtype=np.int64)
+            off = np.asarray(acc.offset, dtype=np.int64)
+            bidx = mat @ coords + off[:, None]
             # revisiting rule: fetch whenever the block index differs from the
             # previous step's (outputs: write on the step before the index changes)
             changed = np.ones(bidx.shape[1], dtype=bool)
@@ -154,7 +172,7 @@ def estimate(cfg: PallasConfig, machine: TPUMachine = TPU_V5E) -> TPUEstimate:
         hbm_comp += uniq * padded_bytes
         useful += fetches * block_bytes
         padded_total += fetches * padded_bytes
-        detail[acc.name] = {
+        detail[acc.field] = {
             "fetches": fetches,
             "unique_blocks": uniq,
             "block_bytes": block_bytes,
@@ -163,7 +181,7 @@ def estimate(cfg: PallasConfig, machine: TPUMachine = TPU_V5E) -> TPUEstimate:
     layout_eff = (useful / padded_total) if padded_total else 1.0
     feasible = vmem <= machine.vmem_usable
     est = TPUEstimate(
-        config=cfg.name,
+        config=ir.name,
         feasible=feasible,
         vmem_bytes=int(vmem),
         hbm_bytes=hbm_total,
@@ -174,25 +192,31 @@ def estimate(cfg: PallasConfig, machine: TPUMachine = TPU_V5E) -> TPUEstimate:
     )
     est.t_hbm = hbm_total / machine.bw_hbm
     peak = machine.peak_flops(
-        min((a.dtype_bits for a in cfg.accesses), default=32)
+        min((fields[a.field].dtype_bits for a in ir.accesses), default=32)
     )
-    if not cfg.is_matmul:
+    if not ir.is_matmul:
         peak = machine.vpu_flops
     else:
         # MXU utilization: matmul dims padded to 128 (the lane/bank analogue)
-        peak *= _mxu_utilization(cfg, machine)
-    est.t_compute = cfg.flops_per_step * cfg.steps / max(peak, 1.0)
-    est.t_grid = cfg.steps * GRID_STEP_OVERHEAD_S
+        peak *= _mxu_utilization(ir, machine)
+    est.t_compute = ir.flops_per_iter * steps / max(peak, 1.0)
+    est.t_grid = steps * GRID_STEP_OVERHEAD_S
     return est
 
 
-def _mxu_utilization(cfg: PallasConfig, machine: TPUMachine) -> float:
+def estimate(cfg: PallasConfig, machine: TPUMachine = TPU_V5E) -> TPUEstimate:
+    """Estimate a PallasConfig: trace to AccessIR (affine index maps only —
+    non-affine closures raise NonAffineIndexMapError), then run the model."""
+    return estimate_ir(trace_pallas(cfg), machine)
+
+
+def _mxu_utilization(ir: AccessIR, machine: TPUMachine) -> float:
     """Fraction of MXU peak usable given block-dim alignment to the 128x128 array."""
     utils = []
-    for acc in cfg.accesses:
-        if acc.is_output or len(acc.block_shape) < 2:
+    for acc in ir.accesses:
+        if acc.is_store or len(acc.tile) < 2:
             continue
-        m, n = acc.block_shape[-2], acc.block_shape[-1]
+        m, n = acc.tile[-2], acc.tile[-1]
         um = m / (math.ceil(m / machine.mxu_dim) * machine.mxu_dim)
         un = n / (math.ceil(n / machine.mxu_dim) * machine.mxu_dim)
         utils.append(um * un)

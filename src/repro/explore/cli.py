@@ -35,6 +35,10 @@ def _build_parser() -> argparse.ArgumentParser:
         description="Estimator-driven configuration-space exploration (no benchmarking).",
     )
     p.add_argument("--kernel", help="kernel to explore (see --list)")
+    p.add_argument("--backend", default=None, choices=("gpu", "tpu"),
+                   help="estimation backend: resolves a kernel family to its gpu "
+                        "(paper §III) or tpu (Pallas) entry, e.g. "
+                        "--kernel attention --backend tpu")
     p.add_argument("--list", action="store_true", help="list explorable kernels and exit")
     p.add_argument("--machine", default=None,
                    help=f"machine model, case-insensitive (registry: {', '.join(sorted(MACHINES))})")
@@ -67,6 +71,8 @@ def _fmt_cfg(cfg: dict) -> str:
         s = f"block={tuple(cfg['block'])}"
         if tuple(cfg.get("fold", (1, 1, 1))) != (1, 1, 1):
             s += f" fold={tuple(cfg['fold'])}"
+        if "chunk" in cfg:
+            s += f" chunk={cfg['chunk']}"
         return s
     return cfg.get("name", str(cfg))
 
@@ -155,7 +161,7 @@ def main(argv: list[str] | None = None) -> int:
     args = _build_parser().parse_args(argv)
     if args.list:
         for name, e in sorted(KERNELS.items()):
-            print(f"{name:16s} [{e.backend}] {e.describe}")
+            print(f"{name:16s} [{e.family}/{e.backend}] {e.describe}")
         return 0
     if not args.kernel:
         print("error: --kernel is required (see --list)", file=sys.stderr)
@@ -172,7 +178,7 @@ def main(argv: list[str] | None = None) -> int:
         )
         return 2
     try:
-        entry = get_kernel(args.kernel)
+        entry = get_kernel(args.kernel, backend=args.backend)
     except KeyError as e:
         print(f"error: {e.args[0]}", file=sys.stderr)
         return 2

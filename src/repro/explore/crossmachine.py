@@ -119,14 +119,17 @@ def compare(
     keep_fraction: float = 0.5,
     sample: int | None = None,
     seed: int = 0,
+    backend: str | None = None,
 ) -> CrossMachineResult:
     """Sweep ``kernel`` over every machine in ``machines`` and compare rankings.
 
-    ``stores`` maps canonical machine names to :class:`ResultStore` instances
-    (or paths); machines absent from the map sweep uncached.  All GPU-path
-    options (``method``, ``prune``, ``sample``) apply identically per machine.
+    ``backend`` resolves a kernel family to its gpu/tpu entry (mirrors
+    ``sweep``).  ``stores`` maps canonical machine names to
+    :class:`ResultStore` instances (or paths); machines absent from the map
+    sweep uncached.  All GPU-path options (``method``, ``prune``, ``sample``)
+    apply identically per machine.
     """
-    entry = get_kernel(kernel)
+    entry = get_kernel(kernel, backend=backend)
     resolved = _resolve_machines(machines)
     if len(resolved) < 2:
         raise ValueError("cross-machine comparison needs at least two machines")
@@ -160,7 +163,7 @@ def compare(
     for name, machine in resolved:
         store = (stores or {}).get(name)
         results[name] = sweep(
-            kernel,
+            entry.name,
             configs=configs,
             machine=machine,
             method=method,

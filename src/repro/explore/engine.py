@@ -30,13 +30,21 @@ from ..core.estimator import EstimateCache, VolumeEstimate, estimate_many
 from ..core.machine import GPUMachine, TPUMachine
 from ..core.model import Prediction, predict
 from ..core.ranking import RankedConfig
+from ..frontend.ir import ir_fingerprint
+from ..frontend.lower import from_kernel_spec, lower_gpu
+from ..frontend.pallas import trace_pallas
 from . import pareto as pareto_mod
 from .prune import PruneReport, prune_configs
 from .registry import KernelEntry, get_kernel, get_machine
 from .space import FilterReport, SearchSpace, subsample
 from .store import ResultStore, canonical_key
 
-_KEY_VERSION = 2  # v2: cache keys fingerprint the FULL machine constants
+# v2: cache keys fingerprint the FULL machine constants
+# v3: config identity is the canonical AccessIR fingerprint — semantically
+#     identical configs spelled differently (list vs tuple blocks, explicit
+#     default arguments, permuted access lists) share one entry, and two
+#     different address streams can never alias one key
+_KEY_VERSION = 3
 # cache misses are estimated in chunks of this size through estimate_many: large
 # enough to amortize the hoisted invariants, small enough that an interrupted
 # sweep loses at most one chunk of store writes
@@ -210,20 +218,27 @@ def _eval_gpu_batch_worker(args) -> list[tuple[dict, VolumeEstimate, Prediction]
     ]
 
 
-def _resolve(kernel) -> tuple[str, KernelEntry | None, Callable | None]:
-    """kernel argument -> (name, registry entry or None, gpu builder or None).
+def _resolve(
+    kernel, backend: str | None = None
+) -> tuple[str, KernelEntry | None, Callable | None, Callable | None]:
+    """kernel argument -> (name, registry entry, gpu builder, IR builder).
 
-    Custom builders are named by module-qualified path so distinct functions
-    never share cache keys; lambdas/closures/partials get angle-bracket names
-    (``<lambda>``, ``...<locals>...``, ``<custom>``) that the persistent-store
-    path rejects, because their closed-over state is invisible to the key.
+    Custom builder callables have no IR builder; the engine recovers their
+    canonical IR from the built spec (``frontend.lower.from_kernel_spec``), so
+    even lambdas/closures get a stable store identity — the key is the address
+    expressions themselves, not the builder's name.
     """
     if isinstance(kernel, str):
-        entry = get_kernel(kernel)
-        return entry.name, entry, entry.build
+        entry = get_kernel(kernel, backend=backend)
+        return entry.name, entry, entry.build, entry.build_ir
+    if backend not in (None, "gpu"):
+        raise ValueError(
+            f"custom builder callables are GPU spec builders; backend={backend!r} "
+            "is only resolvable for registry kernel names"
+        )
     mod = getattr(kernel, "__module__", None)
     qual = getattr(kernel, "__qualname__", "<custom>")
-    return (f"{mod}.{qual}" if mod else qual), None, kernel
+    return (f"{mod}.{qual}" if mod else qual), None, kernel, None
 
 
 def sweep(
@@ -240,21 +255,26 @@ def sweep(
     sample: int | None = None,
     seed: int = 0,
     cache: EstimateCache | None = None,
+    backend: str | None = None,
 ) -> SweepResult:
     """Explore a configuration space through the estimator, best-first.
 
     ``kernel`` is a registry name (``repro.explore.registry.KERNELS``) or a GPU
-    spec builder callable ``(**config) -> KernelSpec``.  With a ``store``, all
-    previously estimated configs are cache hits and the sweep is resumable.
-    ``workers > 0`` spreads cache-miss chunks over a process pool (registry
-    kernels only; custom callables run serially to stay picklability-agnostic).
-    Estimation always goes through the batched ``estimate_many`` fast path;
-    pass an :class:`~repro.core.estimator.EstimateCache` to share its hoisted
+    spec builder callable ``(**config) -> KernelSpec``; ``backend`` resolves a
+    kernel family to its gpu/tpu entry (``sweep("attention", backend="tpu")``).
+    With a ``store``, all previously estimated configs are cache hits and the
+    sweep is resumable; store keys are the canonical AccessIR fingerprint of
+    each configuration, so any spelling that lowers to the same address
+    expressions is a hit.  ``workers > 0`` spreads cache-miss chunks over a
+    process pool (registry kernels only; custom callables run serially to stay
+    picklability-agnostic).  Estimation always goes through the batched
+    ``estimate_many`` fast path; pass an
+    :class:`~repro.core.estimator.EstimateCache` to share its hoisted
     machine-independent invariants across sweeps (e.g. a cross-machine
     comparison — serial path only, process-pool workers keep their own).
     """
     t0 = time.perf_counter()
-    name, entry, build = _resolve(kernel)
+    name, entry, build, build_ir = _resolve(kernel, backend)
     if entry is not None and entry.backend == "tpu":
         if prune or sample is not None:
             raise ValueError(
@@ -307,34 +327,54 @@ def sweep(
 
     if isinstance(store, (str, bytes)) or hasattr(store, "__fspath__"):
         store = ResultStore(store)
-    if store is not None and entry is None and "<" in name:
-        raise ValueError(
-            f"persistent store refused for builder {name!r}: lambdas, closures "
-            "and partials have no stable cache identity (closed-over state is "
-            "invisible to the key) — use a module-level builder or a registry "
-            "kernel name, or pass store=None"
-        )
 
     fits_tag = _fits_tag(fits)
     machine_tag = _machine_tag(machine)
 
-    def key_of(cfg: dict) -> str:
+    def _fingerprint_key(ir) -> str:
         return canonical_key(
             v=_KEY_VERSION,
-            kernel=name,
-            config=cfg,
+            ir=ir_fingerprint(ir),
             machine=machine.name,
             mconst=machine_tag,
             method=method,
             fits=fits_tag,
         )
 
+    def key_of_spec(spec) -> str:
+        """Store key of an already-built spec (pruning prebuilds them)."""
+        return _fingerprint_key(from_kernel_spec(spec))
+
+    def key_and_spec(cfg: dict):
+        """Store key (the canonical AccessIR fingerprint) + the spec it hashes.
+
+        The fingerprint hashes the lowered address expressions themselves, so
+        benign spelling differences (list vs tuple, explicit defaults) share
+        one entry while any semantic difference — including a changed closure
+        in a custom builder — keys apart.  One builder invocation per config:
+        the spec built here is reused by the serial miss path below.
+        """
+        if build_ir is not None:
+            ir = build_ir(**cfg)
+            return _fingerprint_key(ir), lower_gpu(ir)
+        spec = build(**cfg)
+        return _fingerprint_key(from_kernel_spec(spec)), spec
+
     records: list[SweepRecord | None] = [None] * len(configs)
-    misses: list[tuple[int, dict]] = []
+    misses: list[tuple[int, dict, str | None]] = []
     cache_hits = 0
     for i, cfg in enumerate(configs):
-        payload = store.get(key_of(cfg)) if store is not None else None
+        key = None
+        if store is not None:
+            spec = specs_by_idx.get(i)  # pruning already built this one
+            if spec is None:
+                key, spec = key_and_spec(cfg)
+                specs_by_idx[i] = spec
+            else:
+                key = key_of_spec(spec)
+        payload = store.get(key) if store is not None else None
         if payload is not None:
+            specs_by_idx.pop(i, None)  # hit: spec not needed, bound memory
             rc = _gpu_from_payload(payload)
             records[i] = SweepRecord(
                 config=rc.config,
@@ -344,16 +384,16 @@ def sweep(
             )
             cache_hits += 1
         else:
-            misses.append((i, cfg))
+            misses.append((i, cfg, key))
 
-    def commit(i: int, rc: RankedConfig) -> None:
+    def commit(i: int, key: str | None, rc: RankedConfig) -> None:
         """Record + persist one result as soon as it lands, so an interrupted
         sweep keeps everything estimated so far (mid-sweep resumability)."""
         records[i] = SweepRecord(
             config=rc.config, metrics=gpu_metrics(rc, machine), ranked=rc
         )
         if store is not None:
-            store.put(key_of(rc.config), _gpu_payload(rc), machine=machine.name)
+            store.put(key, _gpu_payload(rc), machine=machine.name)
 
     use_pool = workers and workers > 0 and entry is not None and len(misses) > 1
     if use_pool:
@@ -362,20 +402,21 @@ def sweep(
         size = max(1, min(_BATCH_CHUNK, per_worker))
         chunks = [misses[i : i + size] for i in range(0, len(misses), size)]
         with ProcessPoolExecutor(max_workers=workers) as pool:
-            args = [(name, [cfg for _, cfg in ch], machine, fits, method) for ch in chunks]
+            args = [(name, [cfg for _, cfg, _ in ch], machine, fits, method) for ch in chunks]
             for ch, results in zip(chunks, pool.map(_eval_gpu_batch_worker, args)):
-                for (i, _), (cfg, est, pred) in zip(ch, results):
-                    commit(i, RankedConfig(config=dict(cfg), estimate=est, prediction=pred))
+                for (i, _, key), (cfg, est, pred) in zip(ch, results):
+                    commit(i, key, RankedConfig(config=dict(cfg), estimate=est, prediction=pred))
     else:
         for start in range(0, len(misses), _BATCH_CHUNK):
             chunk = misses[start : start + _BATCH_CHUNK]
             specs = [
-                specs_by_idx.get(i) or build(**cfg) for i, cfg in chunk
+                specs_by_idx.get(i) or build(**cfg) for i, cfg, _ in chunk
             ]
             ests = estimate_many(specs, machine, fits, method=method, cache=cache)
-            for (i, cfg), spec, est in zip(chunk, specs, ests):
+            for (i, cfg, key), spec, est in zip(chunk, specs, ests):
                 commit(
                     i,
+                    key,
                     RankedConfig(
                         config=dict(cfg),
                         estimate=est,
@@ -405,58 +446,17 @@ def sweep(
     )
 
 
-def _tpu_config_ident(cfg) -> dict:
-    """The FULL distinguishing identity of a PallasConfig for cache keying.
-
-    ``{"name": ..., **meta}`` alone is not enough: two configs differing in
-    block shapes or grid but not meta would silently alias one store entry.
-    Affine ``index_map`` closures cannot be serialized, so they are
-    fingerprinted by probing at the grid origin and at each unit grid step —
-    which determines an affine map completely.
-    """
-    dims = len(cfg.grid)
-    origin = (0,) * dims
-
-    def probe(index_map, at):
-        return tuple(int(v) for v in index_map(*at))
-
-    return {
-        "name": cfg.name,
-        "meta": dict(cfg.meta),
-        "grid": cfg.grid,
-        "flops_per_step": cfg.flops_per_step,
-        "is_matmul": cfg.is_matmul,
-        "scratch_bytes": cfg.scratch_bytes,
-        "accesses": [
-            {
-                "name": a.name,
-                "block_shape": a.block_shape,
-                "dtype_bits": a.dtype_bits,
-                "is_output": a.is_output,
-                "index_map": (
-                    [probe(a.index_map, origin)]
-                    + [
-                        probe(
-                            a.index_map,
-                            tuple(1 if j == d else 0 for j in range(dims)),
-                        )
-                        for d in range(dims)
-                    ]
-                    if dims
-                    else []
-                ),
-            }
-            for a in cfg.accesses
-        ],
-    }
-
-
 def _sweep_tpu(name, entry, configs, machine, store, t0) -> SweepResult:
     """TPU backend: Pallas BlockSpec-level estimation (core/tpu_estimator.py).
 
     ``configs``, when given, is a list of PallasConfig candidates replacing the
-    registry default space.  Estimation is serial (index_map closures do not
-    pickle); fits/method are GPU-path concepts and do not apply here.
+    registry default space.  Every candidate is traced to the canonical
+    AccessIR once (``frontend.pallas.trace_pallas`` — non-affine ``index_map``
+    closures raise ``NonAffineIndexMapError`` instead of silently aliasing a
+    probe-compatible affine map), which supplies both the store key (the IR
+    fingerprint, same scheme as the GPU path) and the estimator input.
+    Estimation is serial (index_map closures do not pickle); fits/method are
+    GPU-path concepts and do not apply here.
     """
     from ..core import tpu_estimator as te
 
@@ -477,10 +477,10 @@ def _sweep_tpu(name, entry, configs, machine, store, t0) -> SweepResult:
     cache_hits = evaluated = 0
     for cfg in cands:
         ident = {"name": cfg.name, **cfg.meta}
+        ir = trace_pallas(cfg)
         key = canonical_key(
             v=_KEY_VERSION,
-            kernel=name,
-            config=_tpu_config_ident(cfg),
+            ir=ir_fingerprint(ir),
             machine=machine.name,
             mconst=machine_tag,
             method="tpu",
@@ -493,7 +493,7 @@ def _sweep_tpu(name, entry, configs, machine, store, t0) -> SweepResult:
                 SweepRecord(config=_retuple(ident), metrics=dict(metrics), from_cache=True)
             )
             continue
-        est = te.estimate(cfg, machine)
+        est = te.estimate_ir(ir, machine)
         evaluated += 1
         metrics = _tpu_metrics(est)
         if store is not None:

@@ -1,17 +1,22 @@
 """Kernel + machine registry for the exploration engine.
 
-Maps the kernel names under ``src/repro/kernels/`` (plus the paper's GPU
-applications from ``core/appspec.py``) to everything a sweep needs:
+Every explorable kernel is one *family* (``stencil25``, ``lbm_d3q15``,
+``attention``, ``wkv``) with one :class:`KernelEntry` per estimation backend:
 
-* a picklable config -> spec builder (GPU backend) or a PallasConfig space
-  factory (TPU backend),
-* the default :class:`~repro.explore.space.SearchSpace` for that kernel,
-* the default machine model.
+* **gpu** — the entry declares an IR-producing builder
+  (``build_ir: (**config) -> AccessIR``); the engine lowers the IR through
+  :func:`repro.frontend.lower.lower_gpu` into the paper §III pipeline and keys
+  its store on the canonical IR fingerprint.
+* **tpu** — the entry declares a PallasConfig space factory; the engine traces
+  each config to the same AccessIR (:func:`repro.frontend.pallas.trace_pallas`)
+  for the Pallas adaptation (``core.tpu_estimator.estimate_ir``).
 
-GPU entries are estimated with the paper §III pipeline
-(``core.estimator`` + ``core.model``); TPU entries with the Pallas adaptation
-(``core.tpu_estimator``).  TPU spaces are built lazily so importing the
-registry (e.g. inside process-pool workers) does not pull in jax.
+:func:`get_kernel` resolves either an exact entry name or a family + backend
+(``get_kernel("attention", backend="tpu")`` -> the ``attention_tpu`` entry),
+which is what the CLI's ``--backend`` flag uses.  TPU spaces are built lazily
+so importing the registry (e.g. inside process-pool workers) does not pull in
+jax; GPU IR builders live in jax-free modules (``repro.frontend.builders``,
+``core/appspec.py``) for the same reason.
 """
 from __future__ import annotations
 
@@ -27,7 +32,9 @@ from ..core.machine import (
     get_machine,
 )
 from ..core.suggest import unknown_name_message
-from .space import SearchSpace, choice, exact_volume, pow2
+from ..frontend.builders import attention_gpu_ir, wkv_gpu_ir
+from ..frontend.lower import lower_gpu
+from .space import SearchSpace, choice, exact_volume, pow2, predicate
 
 __all__ = [
     "KERNELS",
@@ -66,6 +73,42 @@ def lbm_d3q15_space() -> SearchSpace:
     return _block_fold_space(512, 64, [(1, 1, 1)])
 
 
+def attention_gpu_space() -> SearchSpace:
+    """19 configs: pow2 (bx, by) score-space tiles at 256 or 512 threads."""
+    return SearchSpace(
+        axes=(pow2("bx", 1, 512), pow2("by", 1, 512)),
+        constraints=(
+            predicate(
+                "block volume not in {256, 512}",
+                lambda c: c["bx"] * c["by"] in (256, 512),
+            ),
+        ),
+        assemble=lambda raw: {"block": (raw["bx"], raw["by"], 1)},
+    )
+
+
+def wkv_gpu_space() -> SearchSpace:
+    """25 configs: chunk length x pow2 (bx, by) intra-chunk tiles (256 threads)."""
+    return SearchSpace(
+        axes=(
+            choice("chunk", (16, 32, 64, 128, 256)),
+            pow2("bx", 1, 256),
+            pow2("by", 1, 256),
+        ),
+        constraints=(
+            exact_volume(("bx", "by"), 256),
+            predicate(
+                "block tile exceeds chunk",
+                lambda c: c["bx"] <= c["chunk"] and c["by"] <= c["chunk"],
+            ),
+        ),
+        assemble=lambda raw: {
+            "block": (raw["bx"], raw["by"], 1),
+            "chunk": raw["chunk"],
+        },
+    )
+
+
 def _tpu_stencil_configs():
     from ..kernels.stencil25.ops import config_space
 
@@ -92,36 +135,76 @@ def _tpu_lbm_configs():
 
 @dataclass(frozen=True)
 class KernelEntry:
-    """One explorable kernel: how to build configs and what machine runs them."""
+    """One explorable (kernel family, backend) pair.
+
+    GPU entries declare ``build_ir``; ``build`` (the picklable-by-name spec
+    builder the engine and its pool workers call) is derived as
+    ``lower_gpu(build_ir(**cfg))``.  TPU entries declare ``tpu_configs``.
+    """
 
     name: str
+    family: str
     backend: str  # "gpu" (paper §III estimator) | "tpu" (Pallas adaptation)
     describe: str
-    build: Callable[..., object] | None = None  # gpu: (**cfg) -> KernelSpec
+    build_ir: Callable[..., object] | None = None  # gpu: (**cfg) -> AccessIR
     space: Callable[[], SearchSpace] | None = None  # gpu: default search space
     tpu_configs: Callable[[], list] | None = None  # tpu: PallasConfig list
     default_machine: str = "V100"
+
+    @property
+    def build(self) -> Callable[..., object] | None:
+        """GPU spec builder ``(**cfg) -> KernelSpec`` (lowered from the IR)."""
+        build_ir = self.build_ir
+        if build_ir is None:
+            return None
+
+        def _build(**cfg):
+            return lower_gpu(build_ir(**cfg))
+
+        _build.__name__ = _build.__qualname__ = f"{self.name}__build"
+        return _build
 
 
 KERNELS: dict[str, KernelEntry] = {
     "stencil25": KernelEntry(
         name="stencil25",
+        family="stencil25",
         backend="gpu",
         describe="range-4 3D25pt star stencil, V100 (paper §IV.C / Fig 17)",
-        build=appspec.star3d,
+        build_ir=appspec.star3d_ir,
         space=stencil25_space,
         default_machine="V100",
     ),
     "lbm_d3q15": KernelEntry(
         name="lbm_d3q15",
+        family="lbm_d3q15",
         backend="gpu",
         describe="D3Q15 Allen-Cahn LBM kernel, V100 (paper §IV.D / Fig 18)",
-        build=appspec.lbm_d3q15,
+        build_ir=appspec.lbm_d3q15_ir,
         space=lbm_d3q15_space,
         default_machine="V100",
     ),
+    "attention": KernelEntry(
+        name="attention",
+        family="attention",
+        backend="gpu",
+        describe="naive MHA attention score-space pass, GPU §III pipeline",
+        build_ir=attention_gpu_ir,
+        space=attention_gpu_space,
+        default_machine="A100",
+    ),
+    "wkv": KernelEntry(
+        name="wkv",
+        family="wkv",
+        backend="gpu",
+        describe="chunked WKV intra-chunk pass (chunk x block space), GPU §III pipeline",
+        build_ir=wkv_gpu_ir,
+        space=wkv_gpu_space,
+        default_machine="A100",
+    ),
     "stencil25_tpu": KernelEntry(
         name="stencil25_tpu",
+        family="stencil25",
         backend="tpu",
         describe="stencil25 Pallas block-shape space on TPU v5e",
         tpu_configs=_tpu_stencil_configs,
@@ -129,6 +212,7 @@ KERNELS: dict[str, KernelEntry] = {
     ),
     "lbm_d3q15_tpu": KernelEntry(
         name="lbm_d3q15_tpu",
+        family="lbm_d3q15",
         backend="tpu",
         describe="LBM D3Q15 Pallas block space on TPU v5e",
         tpu_configs=_tpu_lbm_configs,
@@ -136,6 +220,7 @@ KERNELS: dict[str, KernelEntry] = {
     ),
     "attention_tpu": KernelEntry(
         name="attention_tpu",
+        family="attention",
         backend="tpu",
         describe="flash-attention Pallas (block_q, block_kv) space on TPU v5e",
         tpu_configs=_tpu_attention_configs,
@@ -143,6 +228,7 @@ KERNELS: dict[str, KernelEntry] = {
     ),
     "wkv_tpu": KernelEntry(
         name="wkv_tpu",
+        family="wkv",
         backend="tpu",
         describe="chunked WKV Pallas chunk-length space on TPU v5e",
         tpu_configs=_tpu_wkv_configs,
@@ -151,8 +237,17 @@ KERNELS: dict[str, KernelEntry] = {
 }
 
 
-def get_kernel(name: str) -> KernelEntry:
+def get_kernel(name: str, backend: str | None = None) -> KernelEntry:
+    """Resolve an entry by exact name, or by family + requested backend."""
     entry = KERNELS.get(name)
     if entry is None:
         raise KeyError(unknown_name_message("kernel", name, KERNELS))
-    return entry
+    if backend is None or entry.backend == backend:
+        return entry
+    for other in KERNELS.values():
+        if other.family == entry.family and other.backend == backend:
+            return other
+    raise KeyError(
+        f"kernel family {entry.family!r} has no {backend!r} backend entry "
+        f"(available: {sorted(e.name for e in KERNELS.values() if e.family == entry.family)})"
+    )

@@ -7,6 +7,21 @@ are cache hits and only new configs cost estimator time.  Corrupt/truncated
 trailing lines (e.g. from a killed sweep) are skipped, which makes interrupted
 sweeps resumable.
 
+Warm-path scaling (``load_workers``): a 100k-entry store used to pay a full
+``json.loads`` per line before the first cache hit could be served.  The
+default load is now *lazy*: the replay pass decodes only each record's key (a
+prefix scan — we write the ``key`` field first) and keeps the raw line;
+payloads deserialize on first :meth:`get` hit.  A warm sweep therefore parses
+exactly the records it touches, superseded duplicates never parse at all, and
+aggregate views (:meth:`machines`, :meth:`compact`) materialize on demand.
+``load_workers=0`` forces the legacy eager serial parse; ``load_workers=N``
+parses eagerly in parallel line chunks on a process pool (worth it for full
+materialization on many-core hosts; the parent-side unpickle bounds the gain).
+One visible lazy-mode caveat: a corrupt line whose *key* still scans (a torn
+write ending on ``}``) counts toward ``len()``/``keys()`` until something
+touches it — first touch falls back to an eager reload, after which contents
+match ``load_workers=0`` exactly.
+
 Schema note: the ``machine`` field (which architecture produced the record) was
 added for cross-machine exploration; records written before it existed load
 fine (the field reads as ``None``), and old readers ignore it — the cache key
@@ -20,18 +35,67 @@ import os
 from pathlib import Path
 from typing import Iterator
 
+_KEY_PREFIX = '{"key":'
+_DECODER = json.JSONDecoder()
+
 
 def canonical_key(**parts) -> str:
     """Stable cache key from JSON-able parts (tuples normalise to lists)."""
     return json.dumps(parts, sort_keys=True, separators=(",", ":"), default=list)
 
 
-class ResultStore:
-    """Dict-like persistent store backed by an append-only JSONL file."""
+def _parse_store_lines(lines: list[str]) -> list[tuple[str, dict, str | None]]:
+    """Eagerly deserialize a chunk of JSONL records (module-level: picklable
+    for the load pool).  Corrupt lines — the truncated tail of a killed
+    sweep — skip."""
+    out: list[tuple[str, dict, str | None]] = []
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+            # pre-machine-field records read as machine=None
+            out.append((rec["key"], rec["payload"], rec.get("machine")))
+        except (json.JSONDecodeError, KeyError, TypeError):
+            continue
+    return out
 
-    def __init__(self, path: str | os.PathLike):
+
+def _scan_key(line: str) -> str | None:
+    """Decode ONLY the key of one record (we always write ``key`` first).
+
+    ~10x cheaper than parsing the full payload; returns None for lines that
+    need the eager fallback (foreign field order, corrupt tail, non-str key).
+    """
+    if not (line.startswith(_KEY_PREFIX) and line.endswith("}")):
+        return None
+    i = len(_KEY_PREFIX)
+    while i < len(line) and line[i] == " ":
+        i += 1
+    try:
+        key, _ = _DECODER.raw_decode(line, i)
+    except ValueError:
+        return None
+    return key if isinstance(key, str) else None
+
+
+class ResultStore:
+    """Dict-like persistent store backed by an append-only JSONL file.
+
+    ``load_workers=None`` (default): lazy key-scan load, payloads parse on
+    first hit.  ``0``: eager serial parse.  ``N > 0``: eager parse over a
+    process pool in N line chunks.
+    """
+
+    # below this, even the eager path is cheap enough not to bother a pool
+    PARALLEL_MIN_LINES = 20_000
+
+    def __init__(self, path: str | os.PathLike, load_workers: int | None = None):
         self.path = Path(path)
-        self._mem: dict[str, dict] = {}
+        self.load_workers = load_workers
+        # values are parsed payload dicts, or the raw record line (lazy)
+        self._mem: dict[str, dict | str] = {}
         self._machine: dict[str, str | None] = {}
         self._load()
 
@@ -39,20 +103,84 @@ class ResultStore:
         if not self.path.exists():
             return
         with self.path.open() as f:
-            for line in f:
-                line = line.strip()
+            lines = f.readlines()
+        workers = self.load_workers
+        if workers is None:
+            for raw in lines:
+                line = raw.strip()
                 if not line:
                     continue
-                try:
-                    rec = json.loads(line)
-                    self._mem[rec["key"]] = rec["payload"]
-                    # pre-machine-field records read as machine=None
-                    self._machine[rec["key"]] = rec.get("machine")
-                except (json.JSONDecodeError, KeyError, TypeError):
-                    continue  # truncated tail from an interrupted sweep
+                key = _scan_key(line)
+                if key is not None:
+                    self._mem[key] = line  # payload parses lazily on get()
+                    continue
+                for key, payload, machine in _parse_store_lines([line]):
+                    self._mem[key] = payload
+                    self._machine[key] = machine
+            return
+        records = None
+        if workers > 1 and len(lines) > 1:
+            records = self._load_parallel(lines, workers)
+        if records is None:
+            records = _parse_store_lines(lines)
+        for key, payload, machine in records:
+            self._mem[key] = payload
+            self._machine[key] = machine
+
+    @staticmethod
+    def _load_parallel(lines, workers) -> list[tuple] | None:
+        """Chunked pool deserialization; chunk order preserves last-write-wins.
+        Returns None (caller falls back to serial) where pools cannot spawn."""
+        from concurrent.futures import ProcessPoolExecutor
+
+        size = -(-len(lines) // workers)
+        chunks = [lines[i : i + size] for i in range(0, len(lines), size)]
+        try:
+            with ProcessPoolExecutor(max_workers=workers) as pool:
+                return [
+                    rec
+                    for part in pool.map(_parse_store_lines, chunks)
+                    for rec in part
+                ]
+        except (OSError, RuntimeError):  # sandboxed / fork-restricted hosts
+            return None
+
+    def _materialize(self, key: str) -> dict | None:
+        """Parse a lazily-held record.
+
+        If the line turns out corrupt despite scanning a complete key (rare:
+        a torn write that happens to end on ``}``), fall back to one eager
+        reload of the whole file so that an earlier valid record for the same
+        key wins — identical visible semantics to ``load_workers=0``.
+        """
+        line = self._mem.get(key)
+        # already materialized — or dropped — by a corrupt-line reload below
+        if not isinstance(line, str):
+            return line
+        parsed = _parse_store_lines([line])
+        if not parsed or parsed[0][0] != key:
+            self._mem.clear()
+            self._machine.clear()
+            if self.path.exists():
+                with self.path.open() as f:
+                    for k, payload, machine in _parse_store_lines(f.readlines()):
+                        self._mem[k] = payload
+                        self._machine[k] = machine
+            return self._mem.get(key)
+        _, payload, machine = parsed[0]
+        self._mem[key] = payload
+        self._machine[key] = machine
+        return payload
+
+    def _materialize_all(self) -> None:
+        for key in [k for k, v in self._mem.items() if isinstance(v, str)]:
+            self._materialize(key)
 
     def get(self, key: str) -> dict | None:
-        return self._mem.get(key)
+        v = self._mem.get(key)
+        if isinstance(v, str):
+            return self._materialize(key)
+        return v
 
     def put(self, key: str, payload: dict, machine: str | None = None) -> None:
         self._mem[key] = payload
@@ -75,6 +203,7 @@ class ResultStore:
 
     def machines(self) -> dict[str | None, int]:
         """Live-entry count per machine name (``None`` = pre-schema records)."""
+        self._materialize_all()
         out: dict[str | None, int] = {}
         for key in self._mem:
             m = self._machine.get(key)
@@ -83,6 +212,7 @@ class ResultStore:
 
     def compact(self) -> None:
         """Rewrite the log with one line per live key (drops superseded writes)."""
+        self._materialize_all()
         tmp = self.path.with_suffix(".tmp")
         with tmp.open("w") as f:
             for key, payload in self._mem.items():

@@ -1,0 +1,39 @@
+"""repro.frontend — the canonical kernel IR (AccessIR) and its frontends.
+
+The layer between code generators and estimators (paper §I.B: the estimator's
+only inputs are address expressions, launch geometry and field metadata):
+
+* :mod:`repro.frontend.ir`       — the AccessIR data model + canonical fingerprint,
+* :mod:`repro.frontend.lower`    — per-backend lowering (GPU KernelSpec / TPU PallasConfig),
+* :mod:`repro.frontend.pallas`   — tracing frontend: PallasConfig -> AccessIR via
+  affine index-map probing, with a non-affinity guard,
+* :mod:`repro.frontend.builders` — GPU-space IR builders for the frontier kernels.
+"""
+from .builders import attention_gpu_ir, wkv_gpu_ir
+from .ir import (
+    AccessIR,
+    IRAccess,
+    IRField,
+    dedupe_ir,
+    fold_ir,
+    ir_fingerprint,
+)
+from .lower import from_kernel_spec, lower_gpu, lower_tpu
+from .pallas import NonAffineIndexMapError, trace_index_map, trace_pallas
+
+__all__ = [
+    "AccessIR",
+    "IRAccess",
+    "IRField",
+    "NonAffineIndexMapError",
+    "attention_gpu_ir",
+    "dedupe_ir",
+    "fold_ir",
+    "from_kernel_spec",
+    "ir_fingerprint",
+    "lower_gpu",
+    "lower_tpu",
+    "trace_index_map",
+    "trace_pallas",
+    "wkv_gpu_ir",
+]

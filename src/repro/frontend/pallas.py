@@ -1,0 +1,159 @@
+"""Pallas-tracing frontend: derive AccessIR from a PallasConfig automatically.
+
+A Pallas code generator already holds everything the estimator needs *before
+emitting code*: the grid, each operand's block shape and its ``index_map`` from
+grid coordinates to block coordinates.  Index maps are opaque Python closures,
+so we recover their affine form by probing:
+
+* the grid **origin** gives the offset vector,
+* each **unit step** along a grid dim gives that dim's coefficient column,
+* extra **verification probes** (double steps, the mixed ones-vector, the far
+  grid corner) check that the recovered affine map reproduces the closure —
+  a non-affine map (e.g. clamped boundary indexing ``min(i+1, n-1)``) that
+  merely agrees at the origin/unit probes is detected and rejected with
+  :class:`NonAffineIndexMapError` instead of silently aliasing a different
+  access pattern (the failure mode the old store-key probes were open to).
+
+All probes stay inside the grid domain, so a map is accepted iff it is affine
+*over the coordinates it will actually see*; dims of extent 1 contribute a zero
+coefficient (their step is unobservable and irrelevant).
+"""
+from __future__ import annotations
+
+from .ir import AccessIR, IRAccess, IRField
+
+
+class NonAffineIndexMapError(ValueError):
+    """An ``index_map`` is not an affine function of the grid coordinates."""
+
+
+def _probe(index_map, point, where: str) -> tuple[int, ...]:
+    try:
+        out = index_map(*point)
+    except Exception as e:  # pragma: no cover - defensive
+        raise NonAffineIndexMapError(
+            f"{where}: index_map raised {e!r} when probed at grid point {point}"
+        ) from e
+    if not isinstance(out, tuple):
+        out = (out,)
+    return tuple(int(v) for v in out)
+
+
+def _verification_points(grid: tuple[int, ...]) -> list[tuple[int, ...]]:
+    """In-domain probe points beyond origin + unit steps."""
+    dims = len(grid)
+    pts: list[tuple[int, ...]] = []
+    for d in range(dims):
+        if grid[d] >= 3:  # double unit step: catches curvature along one dim
+            pts.append(tuple(2 if j == d else 0 for j in range(dims)))
+    # mixed point: catches cross terms between dims
+    pts.append(tuple(min(1, g - 1) for g in grid))
+    # far corner: catches boundary clamping anywhere in the domain
+    pts.append(tuple(g - 1 for g in grid))
+    return pts
+
+
+def trace_index_map(
+    index_map, grid: tuple[int, ...], where: str = "index_map"
+) -> tuple[tuple[tuple[int, ...], ...], tuple[int, ...]]:
+    """Recover ``(matrix, offset)`` with ``out = matrix @ coords + offset``.
+
+    Raises :class:`NonAffineIndexMapError` when the closure disagrees with the
+    recovered affine map at any verification probe.
+    """
+    dims = len(grid)
+    origin = (0,) * dims
+    offset = _probe(index_map, origin, where)
+    n_out = len(offset)
+    cols: list[tuple[int, ...]] = []
+    for d in range(dims):
+        if grid[d] >= 2:
+            step = _probe(
+                index_map, tuple(1 if j == d else 0 for j in range(dims)), where
+            )
+            if len(step) != n_out:
+                raise NonAffineIndexMapError(
+                    f"{where}: output rank changed between probes "
+                    f"({n_out} at origin, {len(step)} at unit step {d})"
+                )
+            cols.append(tuple(step[o] - offset[o] for o in range(n_out)))
+        else:
+            cols.append((0,) * n_out)  # extent-1 dim: step unobservable
+    matrix = tuple(tuple(cols[d][o] for d in range(dims)) for o in range(n_out))
+    seen = {origin} | {
+        tuple(1 if j == d else 0 for j in range(dims))
+        for d in range(dims)
+        if grid[d] >= 2
+    }
+    for pt in _verification_points(grid):
+        if pt in seen:
+            continue
+        seen.add(pt)
+        want = tuple(
+            offset[o] + sum(matrix[o][d] * pt[d] for d in range(dims))
+            for o in range(n_out)
+        )
+        got = _probe(index_map, pt, where)
+        if got != want:
+            raise NonAffineIndexMapError(
+                f"{where}: not affine over the grid {grid} — the origin/unit-"
+                f"step probes predict {want} at grid point {pt}, but the map "
+                f"returns {got}.  Only affine index maps have an exact AccessIR "
+                "form; rewrite the map (e.g. model clamped boundaries with an "
+                "interior representative block) or estimate it out-of-band."
+            )
+    return matrix, offset
+
+
+def trace_pallas(cfg) -> AccessIR:
+    """AccessIR of a :class:`~repro.core.tpu_estimator.PallasConfig`.
+
+    ``cfg`` is duck-typed (``name, grid, accesses, flops_per_step, is_matmul,
+    scratch_bytes, meta`` with per-access ``name, block_shape, index_map,
+    dtype_bits, is_output``) so this module stays import-independent of the
+    estimator it feeds.
+    """
+    grid = tuple(int(g) for g in cfg.grid)
+    fields: list[IRField] = []
+    accesses: list[IRAccess] = []
+    seen: set[str] = set()
+    for acc in cfg.accesses:
+        if acc.name in seen:
+            raise ValueError(
+                f"config {cfg.name!r}: duplicate operand name {acc.name!r} — "
+                "operands need unique names to be addressable in the IR"
+            )
+        seen.add(acc.name)
+        tile = tuple(int(b) for b in acc.block_shape)
+        matrix, offset = trace_index_map(
+            acc.index_map, grid, where=f"{cfg.name}.{acc.name}"
+        )
+        if len(matrix) != len(tile):
+            raise ValueError(
+                f"config {cfg.name!r}, operand {acc.name!r}: index_map returns "
+                f"{len(matrix)} block coordinates but block_shape has rank "
+                f"{len(tile)}"
+            )
+        fields.append(
+            IRField(name=acc.name, shape=tile, dtype_bits=acc.dtype_bits)
+        )
+        accesses.append(
+            IRAccess(
+                field=acc.name,
+                coeffs=matrix,
+                offset=offset,
+                tile=tile,
+                is_store=acc.is_output,
+            )
+        )
+    return AccessIR(
+        name=cfg.name,
+        fields=tuple(fields),
+        accesses=tuple(accesses),
+        iter_shape=grid,
+        block=(),
+        flops_per_iter=cfg.flops_per_step,
+        is_matmul=cfg.is_matmul,
+        scratch_bytes=cfg.scratch_bytes,
+        meta=dict(cfg.meta),
+    )

@@ -8,6 +8,10 @@ import jax.numpy as jnp
 
 from ...core import tpu_estimator as te
 from ...core.machine import TPU_V5E, TPUMachine
+
+# GPU-space entry: the AccessIR builder that pushes this kernel through the
+# paper §III analytic pipeline (registry kernel "attention", backend "gpu").
+from ...frontend.builders import attention_gpu_ir
 from .kernel import flash_attention_pallas
 from .ref import mha_ref
 
@@ -22,6 +26,14 @@ def config_space(
     The kv refetch across the q-block loop is the V_red analogue: k/v blocks are
     refetched for every q block of the same head.  Larger kv blocks reduce grid
     overhead but raise VMEM; the estimator trades these off analytically.
+
+    The grid splits the batch*head loop into (batch, kv_head, group) dims so
+    every ``index_map`` is *affine* in the grid coordinates — the fused-``bh``
+    form indexed kv heads through an integer division, which the AccessIR
+    tracer rightly rejects (and which the old probe-based store keys silently
+    mis-fingerprinted).  The enumeration order, and therefore the Pallas
+    revisit/fetch schedule, is unchanged: ``bh == batch*hq + kv_head*g + grp``
+    iterates exactly as the old fused dimension did.
     """
     group = max(1, hq // max(hkv, 1))
     out = []
@@ -32,30 +44,37 @@ def config_space(
             nq, nkv = s // bq, s // bkv
             accesses = (
                 te.BlockAccess(
-                    "q", (1, bq, d), lambda bh, i, j: (bh, i, 0), dtype_bits
+                    "q",
+                    (1, bq, d),
+                    lambda bb, hk, gg, i, j, g=group, hq=hq: (
+                        bb * hq + hk * g + gg,
+                        i,
+                        0,
+                    ),
+                    dtype_bits,
                 ),
                 te.BlockAccess(
                     "k",
                     (1, bkv, d),
-                    lambda bh, i, j, g=group, hq=hq, hkv=hkv: (
-                        (bh // hq) * hkv + (bh % hq) // g,
-                        j,
-                        0,
-                    ),
+                    lambda bb, hk, gg, i, j, hkv=hkv: (bb * hkv + hk, j, 0),
                     dtype_bits,
                 ),
                 te.BlockAccess(
                     "v",
                     (1, bkv, d),
-                    lambda bh, i, j, g=group, hq=hq, hkv=hkv: (
-                        (bh // hq) * hkv + (bh % hq) // g,
-                        j,
-                        0,
-                    ),
+                    lambda bb, hk, gg, i, j, hkv=hkv: (bb * hkv + hk, j, 0),
                     dtype_bits,
                 ),
                 te.BlockAccess(
-                    "o", (1, bq, d), lambda bh, i, j: (bh, i, 0), dtype_bits, True
+                    "o",
+                    (1, bq, d),
+                    lambda bb, hk, gg, i, j, g=group, hq=hq: (
+                        bb * hq + hk * g + gg,
+                        i,
+                        0,
+                    ),
+                    dtype_bits,
+                    True,
                 ),
             )
             # causal: ~half the kv blocks do useful work; flops halve but the
@@ -64,7 +83,7 @@ def config_space(
             out.append(
                 te.PallasConfig(
                     name=f"flash_bq{bq}_bkv{bkv}",
-                    grid=(b * hq, nq, nkv),
+                    grid=(b, hkv, group, nq, nkv),
                     accesses=accesses,
                     flops_per_step=useful * (4.0 * bq * bkv * d),
                     is_matmul=True,
@@ -117,4 +136,10 @@ def flash_attention(
     )
 
 
-__all__ = ["flash_attention", "mha_ref", "select_blocks", "config_space"]
+__all__ = [
+    "attention_gpu_ir",
+    "config_space",
+    "flash_attention",
+    "mha_ref",
+    "select_blocks",
+]

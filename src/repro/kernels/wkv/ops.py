@@ -8,6 +8,10 @@ import jax.numpy as jnp
 
 from ...core import tpu_estimator as te
 from ...core.machine import TPU_V5E, TPUMachine
+
+# GPU-space entry: the AccessIR builder that pushes this kernel through the
+# paper §III analytic pipeline (registry kernel "wkv", backend "gpu").
+from ...frontend.builders import wkv_gpu_ir
 from .kernel import wkv_pallas
 from .ref import wkv_ref
 
@@ -22,7 +26,6 @@ def config_space(BH: int, S: int, K: int, dtype_bits: int = 32):
     for L in CANDIDATE_CHUNKS:
         if S % L:
             continue
-        spec = lambda: None
         accesses = tuple(
             te.BlockAccess(nm, (1, L, K), lambda b, c: (b, c, 0), dtype_bits)
             for nm in ("r", "k", "v", "w")
@@ -62,4 +65,4 @@ def wkv(r, k, v, wlog, u, chunk: int | None = None, interpret: bool = False):
     return wkv_pallas(r, k, v, wlog, u, chunk=chunk, interpret=interpret)
 
 
-__all__ = ["wkv", "wkv_ref", "select_chunk", "config_space"]
+__all__ = ["wkv", "wkv_ref", "select_chunk", "config_space", "wkv_gpu_ir"]

@@ -241,17 +241,36 @@ def test_engine_tpu_rejects_gpu_only_options():
         sweep("wkv_tpu", sample=3)
 
 
-def test_engine_store_refused_for_unstable_builder_identity(tmp_path):
-    # lambdas have no stable cache identity (closed-over state is invisible to
-    # the key) -> persistent store must be refused, not silently collided
-    with pytest.raises(ValueError, match="no stable cache identity"):
-        sweep(
-            lambda block, fold: appspec.star3d(block=block, fold=fold, grid=GRID),
-            configs=CFGS[:1],
-            machine=V100,
-            store=tmp_path / "s.jsonl",
-        )
-    # module-level builders are fine (exercised by the roundtrip tests above)
+def test_engine_store_keys_lambda_builders_by_ir_fingerprint(tmp_path):
+    """Store keys are the canonical AccessIR fingerprint of the BUILT spec, so
+    even lambda/closure builders have a stable cache identity: the key is the
+    address expressions themselves, not the builder's name.  A closure change
+    that alters the spec keys apart; an equivalent spelling is a hit."""
+    p = tmp_path / "s.jsonl"
+    r1 = sweep(
+        lambda block, fold: appspec.star3d(block=block, fold=fold, grid=GRID),
+        configs=CFGS[:1],
+        machine=V100,
+        store=p,
+    )
+    assert r1.stats.evaluated == 1
+    # a DIFFERENT lambda producing the SAME spec: cache hit, not a collision
+    r2 = sweep(
+        lambda block, fold: appspec.star3d(block=tuple(block), fold=tuple(fold), grid=GRID),
+        configs=CFGS[:1],
+        machine=V100,
+        store=p,
+    )
+    assert r2.stats.cache_hits == 1 and r2.stats.evaluated == 0
+    assert r1.records[0].metrics == r2.records[0].metrics
+    # closed-over state that changes the spec (different grid) must miss
+    r3 = sweep(
+        lambda block, fold: appspec.star3d(block=block, fold=fold, grid=(64, 32, 32)),
+        configs=CFGS[:1],
+        machine=V100,
+        store=p,
+    )
+    assert r3.stats.cache_hits == 0 and r3.stats.evaluated == 1
 
 
 def test_engine_rejects_backend_machine_mismatch():

@@ -1,0 +1,281 @@
+"""AccessIR data model, canonical fingerprint, Pallas tracing + non-affine guard,
+and the symset fast paths the IR-opened kernels exercise (zero-stride and
+offset-covered strided x accesses)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import tpu_estimator as te
+from repro.core.address import Access, Field, ThreadBox
+from repro.core.machine import TPU_V5E
+from repro.frontend import (
+    AccessIR,
+    IRAccess,
+    IRField,
+    NonAffineIndexMapError,
+    dedupe_ir,
+    fold_ir,
+    ir_fingerprint,
+    lower_gpu,
+    lower_tpu,
+    trace_index_map,
+    trace_pallas,
+)
+
+# --------------------------------------------------------------------------- #
+# data model
+
+
+def _element_ir(**kw):
+    defaults = dict(
+        name="k",
+        fields=(IRField("a", (64, 8, 8), 64),),
+        accesses=(IRAccess("a", (1, 64, 512), 0),),
+        iter_shape=(64, 8, 8),
+        block=(32, 4, 2),
+    )
+    defaults.update(kw)
+    return AccessIR(**defaults)
+
+
+def test_ir_validation_errors():
+    with pytest.raises(ValueError, match="unknown field"):
+        _element_ir(accesses=(IRAccess("nope", (1, 64, 512), 0),))
+    with pytest.raises(ValueError, match="duplicate field"):
+        _element_ir(fields=(IRField("a", (8,)), IRField("a", (8,))))
+    with pytest.raises(ValueError, match="iteration dims"):
+        _element_ir(accesses=(IRAccess("a", (1, 64), 0),))
+    with pytest.raises(ValueError, match="block rank|iteration rank"):
+        _element_ir(block=(32, 4))
+    with pytest.raises(ValueError, match="tile rank"):
+        IRAccess("a", ((1, 2), (3, 4)), (0, 0), tile=(8,))
+    with pytest.raises(ValueError, match="single element index"):
+        IRAccess("a", ((1, 2), (3, 4)), (0, 0))
+    with pytest.raises(ValueError, match="mixed"):
+        AccessIR(
+            name="m",
+            fields=(IRField("a", (8, 8)), IRField("b", (8, 8))),
+            accesses=(
+                IRAccess("a", (1, 8), 0),
+                IRAccess("b", ((1, 0), (0, 1)), (0, 0), tile=(8, 8)),
+            ),
+            iter_shape=(8, 8),
+        )
+
+
+def test_ir_spelling_normalisation():
+    """Lists and tuples, flat and nested coefficient spellings: one identity."""
+    a = IRAccess("a", [1, 64, 512], 3)
+    b = IRAccess("a", ((1, 64, 512),), (3,))
+    assert a == b
+    ir_a = _element_ir(accesses=(a,), block=[32, 4, 2], iter_shape=[64, 8, 8])
+    ir_b = _element_ir(accesses=(b,))
+    assert ir_a == ir_b
+    assert ir_fingerprint(ir_a) == ir_fingerprint(ir_b)
+
+
+def test_fingerprint_ignores_meta_and_access_order_only():
+    base = _element_ir(
+        accesses=(IRAccess("a", (1, 64, 512), 0), IRAccess("a", (1, 64, 512), 4))
+    )
+    permuted = _element_ir(
+        accesses=(IRAccess("a", (1, 64, 512), 4), IRAccess("a", (1, 64, 512), 0))
+    )
+    with_meta = _element_ir(
+        accesses=base.accesses, meta={"display": "only", "benign": 1}
+    )
+    assert ir_fingerprint(base) == ir_fingerprint(permuted) == ir_fingerprint(with_meta)
+    # every semantic field keys apart
+    assert ir_fingerprint(base) != ir_fingerprint(_element_ir(block=(16, 8, 2)))
+    assert ir_fingerprint(base) != ir_fingerprint(_element_ir(iter_shape=(32, 8, 8), block=(32, 4, 2)))
+    assert ir_fingerprint(base) != ir_fingerprint(
+        _element_ir(accesses=(IRAccess("a", (1, 64, 512), 1),))
+    )
+    assert ir_fingerprint(base) != ir_fingerprint(
+        _element_ir(fields=(IRField("a", (64, 8, 8), 32),))
+    )
+    assert ir_fingerprint(base) != ir_fingerprint(_element_ir(regs_per_thread=128))
+
+
+def test_fold_and_dedupe_match_address_layer():
+    from repro.core.address import dedupe_accesses, fold_accesses
+
+    f = Field("a", (64, 8, 8), 8)
+    legacy = dedupe_accesses(
+        fold_accesses(
+            [Access(f, (1, 64, 512), 0), Access(f, (1, 64, 512), 1)], (1, 2, 2)
+        )
+    )
+    ir_acc = dedupe_ir(
+        fold_ir(
+            [IRAccess("a", (1, 64, 512), 0), IRAccess("a", (1, 64, 512), 1)],
+            (1, 2, 2),
+        )
+    )
+    assert [(a.coeffs, a.offset, a.is_store) for a in legacy] == [
+        (ia.coeffs[0], ia.offset[0], ia.is_store) for ia in ir_acc
+    ]
+
+
+# --------------------------------------------------------------------------- #
+# Pallas tracing
+
+
+def test_trace_index_map_recovers_affine_forms():
+    m, o = trace_index_map(lambda i, j, k: (i + 2 * k, 3, j - 1), (4, 5, 6))
+    assert m == ((1, 0, 2), (0, 0, 0), (0, 1, 0))
+    assert o == (0, 3, -1)
+    # extent-1 dims contribute zero coefficients
+    m, o = trace_index_map(lambda i, j: (i + j,), (7, 1))
+    assert m == ((1, 0),) and o == (0,)
+    # empty grid: constant map
+    m, o = trace_index_map(lambda: (2, 3), ())
+    assert m == ((), ()) and o == (2, 3)
+
+
+@pytest.mark.parametrize(
+    "bad,grid",
+    [
+        (lambda i: (min(i, 3),), (8,)),  # clamped boundary
+        (lambda i: (max(i - 1, 0),), (8,)),  # clamped at origin-side
+        (lambda i, j: (i * j,), (4, 4)),  # cross term
+        (lambda i: (i * i,), (5,)),  # curvature
+    ],
+)
+def test_trace_index_map_rejects_non_affine(bad, grid):
+    with pytest.raises(NonAffineIndexMapError, match="not affine"):
+        trace_index_map(bad, grid)
+
+
+def test_trace_index_map_accepts_domain_affine_clamp():
+    """min(i, 3) over grid (4,) IS affine on its domain (i <= 3): accepted."""
+    m, o = trace_index_map(lambda i: (min(i, 3),), (4,))
+    assert m == ((1,),) and o == (0,)
+
+
+def test_estimate_raises_on_non_affine_index_map():
+    cfg = te.PallasConfig(
+        name="clamped",
+        grid=(8,),
+        accesses=(
+            te.BlockAccess("x", (8, 128), lambda i: (min(i + 1, 6), 0), 32),
+        ),
+        flops_per_step=0.0,
+    )
+    with pytest.raises(NonAffineIndexMapError, match="clamped.x"):
+        te.estimate(cfg, TPU_V5E)
+
+
+def test_sweep_raises_on_non_affine_index_map(tmp_path):
+    """The store path must refuse (not silently alias) a non-affine map that
+    agrees with an affine one at the origin/unit-step probes."""
+    from repro.explore import sweep
+
+    cfg = te.PallasConfig(
+        name="clamped",
+        grid=(8,),
+        accesses=(
+            te.BlockAccess("x", (8, 128), lambda i: (min(i, 3), 0), 32),
+        ),
+        flops_per_step=0.0,
+    )
+    with pytest.raises(NonAffineIndexMapError):
+        sweep("stencil25_tpu", configs=[cfg], store=tmp_path / "s.jsonl")
+
+
+def test_trace_pallas_roundtrips_with_lower_tpu():
+    cfg = te.PallasConfig(
+        name="mm",
+        grid=(4, 3, 2),
+        accesses=(
+            te.BlockAccess("A", (128, 64), lambda i, j, k: (i, k), 16),
+            te.BlockAccess("B", (64, 128), lambda i, j, k: (k, j), 16),
+            te.BlockAccess("O", (128, 128), lambda i, j, k: (i, j), 16, True),
+        ),
+        flops_per_step=7.0,
+        is_matmul=True,
+        scratch_bytes=256,
+        meta={"bm": 128},
+    )
+    ir = trace_pallas(cfg)
+    assert ir.granularity == "block"
+    assert ir.iter_shape == (4, 3, 2) and ir.scratch_bytes == 256
+    assert trace_pallas(lower_tpu(ir)) == ir
+    # the traced IR estimates identically to the closure-based config
+    e_cfg = te.estimate(cfg)
+    e_ir = te.estimate_ir(ir)
+    assert e_cfg == e_ir
+
+
+def test_estimate_ir_rejects_element_granular_ir():
+    ir = _element_ir()
+    with pytest.raises(ValueError, match="element-granular"):
+        te.estimate_ir(ir)
+    with pytest.raises(ValueError, match="block-granular"):
+        lower_gpu(
+            trace_pallas(
+                te.PallasConfig(
+                    "c", (2,), (te.BlockAccess("x", (8, 128), lambda i: (i, 0), 32),), 0.0
+                )
+            )
+        )
+
+
+def test_trace_pallas_rejects_duplicate_operands_and_rank_mismatch():
+    dup = te.PallasConfig(
+        "d", (2,),
+        (
+            te.BlockAccess("x", (8, 128), lambda i: (i, 0), 32),
+            te.BlockAccess("x", (8, 128), lambda i: (i, 0), 32),
+        ),
+        0.0,
+    )
+    with pytest.raises(ValueError, match="duplicate operand"):
+        trace_pallas(dup)
+    mismatch = te.PallasConfig(
+        "m", (2,), (te.BlockAccess("x", (8, 128), lambda i: (i,), 32),), 0.0
+    )
+    with pytest.raises(ValueError, match="rank"):
+        trace_pallas(mismatch)
+
+
+# --------------------------------------------------------------------------- #
+# symset fast paths (zero-stride x, offset-covered strided x): exactness vs
+# both the reference per-access path and the enumeration method
+
+
+def _sets_bytes(sets, granularity):
+    return sum(s.cardinality for s in sets.values()) * granularity
+
+
+@pytest.mark.parametrize("granularity", [32, 128])
+@pytest.mark.parametrize(
+    "cx,offsets",
+    [
+        (0, list(range(16))),  # x-invariant row (attention q / wkv r)
+        (16, list(range(16))),  # stride fully covered by offsets (k/v panels)
+        (16, [0, 1, 2, 3]),  # stride NOT covered: sparse enumeration
+        (-16, list(range(16))),  # negative stride, covered
+        (5, [0, 1, 2]),  # odd stride, partial cover
+    ],
+)
+def test_grouped_strided_paths_match_enum(cx, offsets, granularity):
+    from repro.core import footprint as fe
+    from repro.core import symset as fs
+
+    f = Field("A", (64, 8, 4), 4, alignment=32)
+    accesses = [Access(f, (cx, 64, 512), o) for o in offsets]
+    box = ThreadBox(x=(1, 9), y=(0, 5), z=(1, 3))
+    enum_sets = fe.line_sets(accesses, [box], granularity)
+    ref_sets = fs.field_interval_sets(accesses, [box], granularity)
+    grouped = fs.field_interval_sets_grouped(
+        fs.group_accesses(accesses), [box], granularity
+    )
+    want = sum(len(s) for s in enum_sets.values()) * granularity
+    assert _sets_bytes(ref_sets, granularity) == want
+    assert _sets_bytes(grouped, granularity) == want
+    # canonical representation identical between ref and grouped paths
+    for name in ref_sets:
+        assert np.array_equal(ref_sets[name].starts, grouped[name].starts)
+        assert np.array_equal(ref_sets[name].ends, grouped[name].ends)
