@@ -55,10 +55,10 @@ def fig5_l1_cycles():
 
 
 def fig17_stencil_ranking():
-    from repro.explore import sweep
+    from repro.explore import Study
 
     def run():
-        return sweep("stencil25", method="sym").ranked
+        return Study("stencil25", method="sym").result().ranked
 
     us, ranked = _timed(run)
     best = ranked[0]
@@ -71,10 +71,10 @@ def fig17_stencil_ranking():
 
 
 def fig18_lbm_ranking():
-    from repro.explore import sweep
+    from repro.explore import Study
 
     def run():
-        return sweep("lbm_d3q15", method="sym").ranked
+        return Study("lbm_d3q15", method="sym").result().ranked
 
     us, ranked = _timed(run)
     best, worst = ranked[0], ranked[-1]
@@ -226,12 +226,12 @@ def explore_cached_sweep():
     re-sweep from the persistent store — the subsystem's headline speedup."""
     import tempfile
 
-    from repro.explore import sweep
+    from repro.explore import Study
 
     with tempfile.TemporaryDirectory() as d:
         store = os.path.join(d, "stencil25.jsonl")
-        us_cold, cold = _timed(sweep, "stencil25", store=store, workers=8)
-        us_warm, warm = _timed(sweep, "stencil25", store=store)
+        us_cold, cold = _timed(lambda: Study("stencil25", store=store, workers=8).result())
+        us_warm, warm = _timed(lambda: Study("stencil25", store=store).result())
     derived = (
         f"configs={cold.stats.candidates} cold={us_cold/1e6:.1f}s "
         f"warm={us_warm/1e6:.3f}s hits={warm.stats.cache_hits} "
@@ -249,8 +249,8 @@ def sweep_throughput():
       * baseline_cfg_per_s — the per-config reference path (§III pipeline, one
         ``estimator.estimate`` call per configuration; the pre-batching
         engine's cost model),
-      * cold_cfg_per_s     — ``sweep(store=None)`` through the batched
-        ``estimate_many`` fast path, nothing cached,
+      * cold_cfg_per_s     — an uncached ``Study`` run through the batched
+        ``estimate_many`` fast path,
       * warm_cfg_per_s     — the same sweep re-run against a fully populated
         persistent store (every config a cache hit),
       * store_load_*       — load wall time of a large (~20k-line) JSONL
@@ -265,7 +265,7 @@ def sweep_throughput():
     import tempfile
 
     from repro.core import appspec, estimator
-    from repro.explore import sweep
+    from repro.explore import Study
     from repro.explore.store import ResultStore
 
     kernel, reps = "stencil25", 2
@@ -284,11 +284,11 @@ def sweep_throughput():
         return [estimator.estimate(s, method="sym") for s in specs]
 
     t_base, _ = best_of(baseline)
-    t_cold, cold = best_of(lambda: sweep(kernel, store=None))
+    t_cold, cold = best_of(lambda: Study(kernel).result())
     with tempfile.TemporaryDirectory() as d:
         store = os.path.join(d, f"{kernel}.jsonl")
-        sweep(kernel, store=store)  # populate
-        t_warm, warm = best_of(lambda: sweep(kernel, store=store))
+        Study(kernel, store=store).run()  # populate
+        t_warm, warm = best_of(lambda: Study(kernel, store=store).result())
         # warm-path store load at scale: replicate the real records (re-keyed)
         # to ~20k lines and time eager serial parse vs the lazy key-scan load
         with open(store) as f:
@@ -336,10 +336,10 @@ def sweep_throughput():
 def crossmachine_ranking_shift():
     """Cross-machine exploration: the stencil space ranked on V100/A100/H100 in
     one batched run — how portable is the predicted best config (ISSUE 2)?"""
-    from repro.explore.crossmachine import compare
+    from repro.explore import Study
 
     def run():
-        return compare("stencil25", ["v100", "a100", "h100"], sample=24)
+        return Study("stencil25", machines=["v100", "a100", "h100"], sample=24).compare()
 
     us, cm = _timed(run)
     taus = " ".join(f"{a}/{b}={t:+.2f}" for (a, b), t in cm.tau.items())
@@ -348,6 +348,42 @@ def crossmachine_ranking_shift():
         "crossmachine_ranking_shift",
         us,
         f"winner_v100={win.config['block']} tau[{taus}]",
+    )
+
+
+def study_multimachine_sharing():
+    """Multi-machine Study vs N independent sweeps: the machine-independent
+    per-config work (IR tracing, block footprints, bank-conflict cycles) is
+    paid once and fanned out through the shared EstimateCache, so the marginal
+    machine should cost well under a full sweep (ROADMAP: "estimate_many
+    across machines in one call")."""
+    from repro.explore import Study
+
+    machines = ["v100", "a100", "h100"]
+    studies = []
+
+    def fused():
+        study = Study("stencil25", machines=machines)
+        studies.append(study)  # keep the last run's cache counters for the report
+        return study.run()
+
+    def independent():
+        return [Study("stencil25", machine=m).result() for m in machines]
+
+    Study("stencil25", machine="v100", sample=16).run()  # allocator/import warmup
+    # interleaved best-of-2: the two variants alternate so neither systematically
+    # pays the noisy-neighbour penalty of going first
+    t_fused, t_indep = [], []
+    for _ in range(2):
+        t_fused.append(_timed(fused)[0])
+        t_indep.append(_timed(independent)[0])
+    us_fused, us_indep = min(t_fused), min(t_indep)
+    return (
+        "study_multimachine_sharing",
+        us_fused,
+        f"machines={len(machines)} fused={us_fused/1e6:.1f}s "
+        f"independent={us_indep/1e6:.1f}s saving={us_indep/max(us_fused,1):.2f}x "
+        f"cache_hits={studies[-1].cache.hits}",
     )
 
 
@@ -392,6 +428,7 @@ BENCHES = [
     explore_cached_sweep,
     sweep_throughput,
     crossmachine_ranking_shift,
+    study_multimachine_sharing,
     dryrun_roofline_summary,
 ]
 

@@ -15,15 +15,15 @@ Run: PYTHONPATH=src python examples/stencil_autotune.py
 """
 from repro.core import appspec, estimator, exactcount
 from repro.core.machine import V100
-from repro.explore import sweep
+from repro.explore import Study
 from repro.explore.store import ResultStore
 
 for kernel, build in (("stencil25", appspec.star3d), ("lbm_d3q15", appspec.lbm_d3q15)):
-    res = sweep(
+    res = Study(
         kernel,
         store=ResultStore.default_path(kernel, "V100", "sym"),
         workers=4,
-    )
+    ).result()
     s = res.stats
     print(
         f"\n== {kernel}: swept {s.candidates} configs in {s.wall_s:.1f}s "

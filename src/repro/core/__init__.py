@@ -12,7 +12,7 @@ from .address import (  # noqa: F401
     fold_accesses,
 )
 from .capacity import DEFAULT_FITS, CapacityFits, Sigmoid, fit_sigmoid  # noqa: F401
-from .estimator import VolumeEstimate, estimate  # noqa: F401
+from .estimator import GPUAnalyticEstimator, VolumeEstimate, estimate  # noqa: F401
 from .machine import (  # noqa: F401
     A100_40GB,
     H100_SXM,
@@ -31,6 +31,14 @@ from .machine import (  # noqa: F401
     tpu_machines,
 )
 from .model import Prediction, predict, predict_from_volumes  # noqa: F401
+from .record import (  # noqa: F401
+    EstimateRecord,
+    Estimator,
+    gpu_record,
+    record_from_payload,
+    record_payload,
+    tpu_record,
+)
 from .ranking import (  # noqa: F401
     RankedConfig,
     kendall_tau,
@@ -43,5 +51,6 @@ from .tpu_estimator import (  # noqa: F401
     BlockAccess,
     PallasConfig,
     TPUEstimate,
+    TPUPallasEstimator,
     select_config,
 )

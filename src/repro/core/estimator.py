@@ -471,6 +471,52 @@ def estimate(
     return _estimate_one(spec, machine, fits, method, _RefPrims(method))
 
 
+class GPUAnalyticEstimator:
+    """The paper-§III pipeline behind the backend-agnostic
+    :class:`~repro.core.record.Estimator` protocol.
+
+    ``estimate_batch`` consumes element-granular :class:`~repro.frontend.ir.AccessIR`
+    objects (lowering each to a :class:`KernelSpec` unless the caller supplies
+    prelowered ``specs``), runs the batched :func:`estimate_many` fast path plus
+    the multi-limiter prediction, and returns unified
+    :class:`~repro.core.record.EstimateRecord` rows — the same schema the TPU
+    estimator produces, so the exploration layer never branches on backend.
+    """
+
+    backend = "gpu"
+
+    def __init__(self, method: str = "sym", fits: CapacityFits | None = None):
+        _footprint_fns(method)  # validate eagerly, not at first batch
+        self.method = method
+        self.fits = fits
+
+    def estimate_batch(
+        self,
+        irs: Sequence,
+        machine: GPUMachine,
+        *,
+        configs: Sequence[dict] | None = None,
+        cache: EstimateCache | None = None,
+        specs: Sequence[KernelSpec | None] | None = None,
+    ) -> list:
+        # deferred: model/record import estimator, so top-level imports would cycle
+        from ..frontend.lower import lower_gpu
+        from .model import predict
+        from .record import gpu_record
+
+        fits = self.fits if self.fits is not None else machine.fits
+        irs = list(irs)
+        ready = list(specs) if specs is not None else [None] * len(irs)
+        ready = [s if s is not None else lower_gpu(ir) for s, ir in zip(ready, irs)]
+        ests = estimate_many(ready, machine, fits, method=self.method, cache=cache)
+        if configs is None:
+            configs = [{"name": ir.name, **ir.meta} for ir in irs]
+        return [
+            gpu_record(cfg, est, predict(spec, est, machine), machine)
+            for cfg, spec, est in zip(configs, ready, ests)
+        ]
+
+
 def estimate_many(
     specs_or_configs: Iterable[KernelSpec | dict],
     machine: GPUMachine = V100,

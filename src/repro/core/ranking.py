@@ -40,16 +40,17 @@ def rank_configs(
 ) -> list[RankedConfig]:
     """Estimate + predict every configuration; return sorted best-first.
 
-    Thin wrapper over :func:`repro.explore.engine.sweep` (serial, uncached) —
-    kept as the stable narrow API for callers that bring their own config list.
-    Pass a registry kernel name to ``sweep`` directly for caching, pruning and
-    process-pool parallelism.  ``fits=None`` uses ``machine.fits``.
+    Thin wrapper over a single-machine :class:`repro.explore.Study` (serial,
+    uncached) — kept as the stable narrow API for callers that bring their own
+    config list.  Build a ``Study`` directly for caching, pruning,
+    multi-machine fan-out and process-pool parallelism.  ``fits=None`` uses
+    ``machine.fits``.
     """
-    from ..explore.engine import sweep  # local import: explore depends on core
+    from ..explore.study import Study  # local import: explore depends on core
 
-    return sweep(
+    return Study(
         build, configs=configs, machine=machine, fits=fits, method=method
-    ).ranked
+    ).result().ranked
 
 
 def top_k(ranked: Sequence[RankedConfig], k: int = 5) -> list[RankedConfig]:

@@ -223,6 +223,39 @@ def _mxu_utilization(ir: AccessIR, machine: TPUMachine) -> float:
     return min(utils) if utils else 1.0
 
 
+class TPUPallasEstimator:
+    """The Pallas adaptation behind the backend-agnostic
+    :class:`~repro.core.record.Estimator` protocol.
+
+    ``estimate_batch`` consumes block-granular AccessIRs (as produced by
+    :func:`repro.frontend.pallas.trace_pallas`) and returns unified
+    :class:`~repro.core.record.EstimateRecord` rows — the VMEM feasibility
+    gate lands in the shared ``feasible`` field, backend extras
+    (``vmem_bytes``, ``layout_efficiency``, ...) in ``metrics``.
+    """
+
+    backend = "tpu"
+
+    def estimate_batch(
+        self,
+        irs: Sequence[AccessIR],
+        machine: TPUMachine,
+        *,
+        configs: Sequence[dict] | None = None,
+        cache=None,  # accepted for protocol symmetry; the TPU model has no
+        # machine-independent sub-results worth memoizing (one grid walk each)
+    ) -> list:
+        from .record import tpu_record  # deferred: record imports core modules
+
+        irs = list(irs)
+        if configs is None:
+            configs = [{"name": ir.name, **ir.meta} for ir in irs]
+        return [
+            tpu_record(cfg, estimate_ir(ir, machine))
+            for cfg, ir in zip(configs, irs)
+        ]
+
+
 def rank_configs(
     candidates: Sequence[PallasConfig], machine: TPUMachine = TPU_V5E
 ) -> list[tuple[PallasConfig, TPUEstimate]]:

@@ -2,31 +2,48 @@
 
 The paper's headline capability is ranking large configuration spaces with an
 analytic estimator instead of compile-and-benchmark autotuning.  This package
-is the search layer that makes that fast at scale:
+is the search layer that makes that fast at scale, behind ONE user-facing API:
 
+* :mod:`repro.explore.study`    — the :class:`Study` facade (kernel x space x
+  machines x backend x store) over the backend-agnostic
+  :class:`~repro.core.record.Estimator` protocol,
 * :mod:`repro.explore.space`    — declarative search-space DSL (axes + constraints),
 * :mod:`repro.explore.prune`    — cheap roofline/occupancy pre-filters,
-* :mod:`repro.explore.engine`   — batched parallel estimation with memoization,
 * :mod:`repro.explore.store`    — persistent, resumable JSONL result store,
 * :mod:`repro.explore.pareto`   — Pareto frontier + top-k selection,
-* :mod:`repro.explore.crossmachine` — one space swept over several architectures,
-* :mod:`repro.explore.cli`      — ``python -m repro.explore --kernel stencil25 --top 5``.
+* :mod:`repro.explore.registry` — kernel / machine / estimator registries,
+* :mod:`repro.explore.cli`      — ``python -m repro.explore --kernel stencil25 --top 5``,
+* :mod:`repro.explore.engine` / :mod:`repro.explore.crossmachine` — deprecated
+  ``sweep()`` / ``compare()`` shims over :class:`Study`.
 
 Quickstart::
 
-    from repro.explore import sweep
-    res = sweep("stencil25", store="results/explore/stencil.jsonl", workers=4)
-    best = res.top(5)           # best-first SweepRecords
-    frontier = res.pareto()     # non-dominated (GLUPs, DRAM B/LUP, occupancy)
+    from repro.explore import Study
+
+    study = Study("stencil25", store="results/explore/stencil.jsonl", workers=4)
+    best = study.top(5)            # best-first SweepRecords
+    frontier = study.pareto()      # non-dominated (GLUPs, DRAM B/LUP, occupancy)
+
+    multi = Study("attention", backend="tpu", machines=["tpuv5e", "tpuv6e"])
+    shift = multi.compare()        # Kendall tau + winner placements
 """
-from .crossmachine import CrossMachineResult, compare, default_stores
-from .engine import SweepRecord, SweepResult, SweepStats, sweep
-from .pareto import GPU_OBJECTIVES, TPU_OBJECTIVES, pareto_front, top_k
+from .crossmachine import compare, default_stores
+from .engine import sweep
+from .pareto import (
+    GPU_OBJECTIVES,
+    TPU_OBJECTIVES,
+    default_objectives,
+    pareto_front,
+    top_k,
+    validate_objectives,
+)
 from .prune import prune_configs, upper_bound_glups
 from .registry import (
+    ESTIMATORS,
     KERNELS,
     MACHINES,
     canonical_machine_name,
+    get_estimator,
     get_kernel,
     get_machine,
 )
@@ -44,27 +61,42 @@ from .space import (
     predicate,
 )
 from .store import ResultStore, canonical_key
+from .study import (
+    CrossMachineResult,
+    Study,
+    StudyResult,
+    SweepRecord,
+    SweepResult,
+    SweepStats,
+    WinnerPlacement,
+)
 
 __all__ = [
     "Axis",
     "Constraint",
     "CrossMachineResult",
+    "ESTIMATORS",
     "GPU_OBJECTIVES",
     "KERNELS",
     "MACHINES",
     "ResultStore",
     "SearchSpace",
+    "Study",
+    "StudyResult",
     "SweepRecord",
     "SweepResult",
     "SweepStats",
     "TPU_OBJECTIVES",
+    "WinnerPlacement",
     "canonical_key",
     "canonical_machine_name",
     "compare",
+    "default_objectives",
     "default_stores",
     "choice",
     "divides_grid",
     "exact_volume",
+    "get_estimator",
     "get_kernel",
     "get_machine",
     "irange",
@@ -77,4 +109,5 @@ __all__ = [
     "sweep",
     "top_k",
     "upper_bound_glups",
+    "validate_objectives",
 ]

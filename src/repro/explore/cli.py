@@ -1,9 +1,10 @@
 """Command-line sweep driver: ``python -m repro.explore --kernel stencil25 --top 5``.
 
-Runs a full configuration-space sweep through the exploration engine, persists
-every estimate to a resumable JSONL store (re-invocations are incremental and
-report the cache-hit count), and prints the best-first ranking plus, on
-request, the Pareto frontier.
+A thin shell over :class:`repro.explore.Study`: every invocation declares one
+study (kernel x space x machines x backend x store), runs it, and prints the
+best-first ranking plus, on request, the Pareto frontier.  Estimates persist
+to a resumable JSONL store, so re-invocations are incremental and report the
+cache-hit count.
 
 ``--machine`` picks an architecture from the registry (case-insensitive:
 ``a100``, ``A100`` and ``A100-SXM4-40GB`` all work); ``--machines v100,a100``
@@ -17,8 +18,7 @@ import argparse
 import json
 import sys
 
-from .crossmachine import CrossMachineResult, compare, default_stores
-from .engine import SweepResult, sweep
+from .crossmachine import default_stores
 from .registry import (
     KERNELS,
     MACHINES,
@@ -27,6 +27,7 @@ from .registry import (
     get_machine,
 )
 from .store import ResultStore
+from .study import CrossMachineResult, Study, SweepResult
 
 
 def _build_parser() -> argparse.ArgumentParser:
@@ -191,9 +192,9 @@ def main(argv: list[str] | None = None) -> int:
             stores = None
             if not args.no_store:
                 stores = default_stores(entry.name, names, method)
-            cm = compare(
+            cm = Study(
                 entry.name,
-                names,
+                machines=names,
                 method=args.method,
                 stores=stores,
                 workers=args.workers,
@@ -201,7 +202,7 @@ def main(argv: list[str] | None = None) -> int:
                 keep_fraction=args.keep_fraction,
                 sample=args.sample,
                 seed=args.seed,
-            )
+            ).compare()
         except (ValueError, KeyError) as e:
             print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
             return 2
@@ -225,7 +226,7 @@ def main(argv: list[str] | None = None) -> int:
             args.store or ResultStore.default_path(entry.name, machine_key, method)
         )
     try:
-        res = sweep(
+        res = Study(
             entry.name,
             machine=machine_key,
             method=args.method,
@@ -235,7 +236,7 @@ def main(argv: list[str] | None = None) -> int:
             keep_fraction=args.keep_fraction,
             sample=args.sample,
             seed=args.seed,
-        )
+        ).result()
     except (ValueError, KeyError) as e:
         print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
         return 2

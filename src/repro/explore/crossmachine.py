@@ -1,111 +1,28 @@
-"""Cross-machine exploration: one kernel space, several architectures.
+"""Deprecated cross-machine entry point — a shim over :class:`repro.explore.Study`.
 
-The paper's selection problem — rank a configuration space without running it —
-generalizes across machines: the best configuration on one architecture is not
-necessarily the best on another (different cache capacities shift capacity
-misses, different balance points shift the limiter).  :func:`compare` sweeps
-the *same* candidate list over every requested machine model in one batched
-run (candidates are enumerated once; per-machine estimates still go through
-each machine's own store, so re-runs stay incremental per architecture) and
-reports how the predicted ranking shifts:
+The comparison machinery (shared candidate enumeration, per-pair Kendall tau,
+winner placements) moved into :mod:`repro.explore.study`; a multi-machine
+:class:`Study` additionally shares the machine-independent per-config work
+(IR tracing, block footprints, bank-conflict cycles) across all machines
+through one :class:`~repro.core.estimator.EstimateCache`.  :func:`compare` is
+kept for source compatibility; new code should write::
 
-* per-pair Kendall rank correlation of the predicted scores over the common
-  (un-pruned) candidates — how portable the ranking is between architectures;
-* per-machine winners and where each winner places on every other machine —
-  the cost of tuning on machine A and deploying on machine B.
-
-Machines must share a backend (all GPU or all TPU); the score is predicted
-GLup/s on the GPU path and predicted time on the TPU path.
+    Study("stencil25", machines=["v100", "a100", "h100"]).compare()
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
 from typing import Sequence
 
-from ..core.estimator import EstimateCache
-from ..core.machine import GPUMachine, TPUMachine, canonical_machine_name, get_machine
-from ..core.ranking import kendall_tau
-from .engine import SweepResult, sweep
+from ..core.machine import GPUMachine, TPUMachine
 from .registry import get_kernel
-from .space import subsample
-from .store import ResultStore, canonical_key
-
-
-def _cfg_key(config: dict) -> str:
-    return canonical_key(config=config)
-
-
-@dataclass
-class WinnerPlacement:
-    """Where one machine's predicted-best config lands on every machine."""
-
-    machine: str  # the machine this config wins on
-    config: dict
-    # machine -> (rank index, score) on that machine; rank None = pruned there
-    placements: dict = field(default_factory=dict)
-
-
-@dataclass
-class CrossMachineResult:
-    kernel: str
-    backend: str
-    machines: list[str]  # canonical registry keys, input order
-    results: dict  # canonical key -> SweepResult
-    score_metric: str  # "glups" (higher better) | "time_s" (lower better)
-    # (machine_a, machine_b) -> Kendall tau over common configs, or None when
-    # fewer than two configs survived on both machines (nothing to compare)
-    tau: dict
-    winners: list  # WinnerPlacement per machine
-
-    def summary(self, top: int = 5) -> dict:
-        return {
-            "kernel": self.kernel,
-            "backend": self.backend,
-            "machines": self.machines,
-            "score_metric": self.score_metric,
-            "kendall_tau": {f"{a}/{b}": t for (a, b), t in self.tau.items()},
-            "winners": [
-                {
-                    "machine": w.machine,
-                    "config": w.config,
-                    "placements": {
-                        m: {"rank": r, "score": s}
-                        for m, (r, s) in w.placements.items()
-                    },
-                }
-                for w in self.winners
-            ],
-            "per_machine": {
-                m: {
-                    "candidates": res.stats.candidates,
-                    "evaluated": res.stats.evaluated,
-                    "cache_hits": res.stats.cache_hits,
-                    "store": res.store_path,
-                    "top": [
-                        {"config": r.config, "metrics": r.metrics}
-                        for r in res.top(top)
-                    ],
-                }
-                for m, res in self.results.items()
-            },
-        }
-
-
-def _resolve_machines(machines: Sequence[str | GPUMachine | TPUMachine]):
-    out: list[tuple[str, GPUMachine | TPUMachine]] = []
-    for m in machines:
-        if isinstance(m, str):
-            out.append((canonical_machine_name(m), get_machine(m)))
-        else:
-            # machine *instances* need no registry entry (custom re-fits /
-            # hypothetical parts built via dataclasses.replace compare fine);
-            # registered ones still get their canonical label
-            try:
-                label = canonical_machine_name(m.name)
-            except KeyError:
-                label = m.name
-            out.append((label, m))
-    return out
+from .store import ResultStore
+from .study import (  # noqa: F401 (compat re-exports)
+    CrossMachineResult,
+    Study,
+    WinnerPlacement,
+    resolve_machines as _resolve_machines,
+)
 
 
 def compare(
@@ -121,14 +38,21 @@ def compare(
     seed: int = 0,
     backend: str | None = None,
 ) -> CrossMachineResult:
-    """Sweep ``kernel`` over every machine in ``machines`` and compare rankings.
+    """Deprecated: multi-machine :class:`~repro.explore.study.Study` shim.
 
-    ``backend`` resolves a kernel family to its gpu/tpu entry (mirrors
-    ``sweep``).  ``stores`` maps canonical machine names to
-    :class:`ResultStore` instances (or paths); machines absent from the map
-    sweep uncached.  All GPU-path options (``method``, ``prune``, ``sample``)
-    apply identically per machine.
+    ``compare(k, ms, ...)`` is ``Study(k, machines=ms, ...).compare()`` with
+    the historical argument validation (at least two machines, no duplicates,
+    one shared backend) preserved.  Per-machine sweep results are identical to
+    the old implementation; one intentional report-level change: the Kendall
+    tau is now computed over the *feasible* common configs only (infeasible
+    records score ``inf`` and used to inject NaN comparisons into the tau).
     """
+    warnings.warn(
+        "repro.explore.compare() is deprecated; use repro.explore.Study "
+        "(Study(kernel, machines=[...]).compare())",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     entry = get_kernel(kernel, backend=backend)
     resolved = _resolve_machines(machines)
     if len(resolved) < 2:
@@ -142,98 +66,18 @@ def compare(
             "GPU and TPU machines — compare GPU architectures (or TPU "
             "generations) against each other"
         )
-
-    # enumerate the candidate list ONCE so every machine ranks the exact same
-    # space (per-machine pruning may still drop different subsets, which the
-    # common-config alignment below accounts for)
-    if configs is None and entry.backend == "gpu":
-        if entry.space is None:
-            raise ValueError(f"no search space registered for kernel {kernel!r}")
-        configs = entry.space().configs()
-        if sample is not None:
-            configs = subsample(configs, sample, seed)
-            sample = None  # already applied; don't re-subsample inside sweep
-
-    # one shared estimate cache across all machines: block-level footprints and
-    # bank-conflict cycles are machine-independent, so an N-machine sweep pays
-    # that work once (wave-level footprints key on each machine's own wave
-    # geometry and stay separate; pool workers keep their own caches)
-    shared_cache = EstimateCache()
-    results: dict[str, SweepResult] = {}
-    for name, machine in resolved:
-        store = (stores or {}).get(name)
-        results[name] = sweep(
-            entry.name,
-            configs=configs,
-            machine=machine,
-            method=method,
-            store=store,
-            workers=workers,
-            prune=prune,
-            keep_fraction=keep_fraction,
-            sample=sample,
-            seed=seed,
-            cache=shared_cache,
-        )
-
-    backend = next(iter(results.values())).backend
-    score_metric = "glups" if backend == "gpu" else "time_s"
-    # higher-is-better orientation for rank correlation
-    sign = 1.0 if score_metric == "glups" else -1.0
-
-    scores: dict[str, dict[str, float]] = {
-        name: {_cfg_key(r.config): sign * r.metrics[score_metric] for r in res.records}
-        for name, res in results.items()
-    }
-
-    names = [n for n, _ in resolved]
-    tau: dict[tuple[str, str], float | None] = {}
-    for i, a in enumerate(names):
-        for b in names[i + 1 :]:
-            common = sorted(set(scores[a]) & set(scores[b]))
-            # < 2 shared un-pruned configs: no ranking comparison is possible;
-            # None (not a fake "perfect agreement" 1.0) keeps the report honest
-            if len(common) < 2:
-                tau[(a, b)] = None
-                continue
-            tau[(a, b)] = kendall_tau(
-                [scores[a][k] for k in common], [scores[b][k] for k in common]
-            )
-
-    winners: list[WinnerPlacement] = []
-    for name in names:
-        res = results[name]
-        if not res.records:
-            continue
-        best = res.records[0]
-        bk = _cfg_key(best.config)
-        w = WinnerPlacement(machine=name, config=best.config)
-        for other in names:
-            rank = next(
-                (
-                    i
-                    for i, r in enumerate(results[other].records)
-                    if _cfg_key(r.config) == bk
-                ),
-                None,
-            )
-            score = (
-                results[other].records[rank].metrics[score_metric]
-                if rank is not None
-                else None
-            )
-            w.placements[other] = (rank, score)
-        winners.append(w)
-
-    return CrossMachineResult(
-        kernel=entry.name,
-        backend=backend,
-        machines=names,
-        results=results,
-        score_metric=score_metric,
-        tau=tau,
-        winners=winners,
-    )
+    return Study(
+        entry.name,
+        configs=configs,
+        machines=[m for _, m in resolved],
+        method=method,
+        stores=stores,
+        workers=workers,
+        prune=prune,
+        keep_fraction=keep_fraction,
+        sample=sample,
+        seed=seed,
+    ).compare()
 
 
 def default_stores(

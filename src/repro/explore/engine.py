@@ -1,244 +1,36 @@
-"""Batched parallel estimation engine — the one exploration path of the repo.
+"""Deprecated sweep entry point — a thin shim over :class:`repro.explore.Study`.
 
-Turns the per-config estimator (paper §III pipeline on the GPU side, the Pallas
-adaptation on the TPU side) into a high-throughput search engine:
+The batched parallel estimation machinery that used to live here (including
+the separate ``_sweep_tpu`` fork) moved into :mod:`repro.explore.study`, where
+both backends run through one :class:`~repro.core.record.Estimator` protocol
+and one :class:`~repro.explore.study.SweepRecord` schema.  :func:`sweep` is
+kept for source compatibility and delegates verbatim; new code should build a
+:class:`~repro.explore.study.Study` directly::
 
-* candidates come from an explicit config list or the kernel's registered
-  :class:`~repro.explore.space.SearchSpace`,
-* optional analytic pruning (:mod:`repro.explore.prune`) discards hopeless
-  candidates before any full estimate runs,
-* estimation is memoized through a persistent :class:`~repro.explore.store.ResultStore`
-  (JSON-lines, resumable) keyed on ``(kernel, config, machine, method)``,
-* cache misses are evaluated serially or on a ``concurrent.futures`` process
-  pool (``workers > 0``, registry kernels only — worker processes rebuild the
-  spec from the registry so nothing heavyweight crosses the pipe),
-* results come back as the same :class:`~repro.core.ranking.RankedConfig`
-  objects ``core/ranking.py`` produces, sorted best-first, plus a Pareto
-  frontier over (throughput, DRAM volume, occupancy).
+    Study("stencil25", machine="a100", store=..., workers=4).result()
 """
 from __future__ import annotations
 
-import dataclasses
-import hashlib
-import time
-from concurrent.futures import ProcessPoolExecutor
-from dataclasses import dataclass
-from typing import Callable, Sequence
+import warnings
+from typing import Sequence
 
 from ..core.capacity import CapacityFits
-from ..core.estimator import EstimateCache, VolumeEstimate, estimate_many
+from ..core.estimator import EstimateCache
 from ..core.machine import GPUMachine, TPUMachine
-from ..core.model import Prediction, predict
-from ..core.ranking import RankedConfig
-from ..frontend.ir import ir_fingerprint
-from ..frontend.lower import from_kernel_spec, lower_gpu
-from ..frontend.pallas import trace_pallas
-from . import pareto as pareto_mod
-from .prune import PruneReport, prune_configs
-from .registry import KernelEntry, get_kernel, get_machine
-from .space import FilterReport, SearchSpace, subsample
-from .store import ResultStore, canonical_key
-
-# v2: cache keys fingerprint the FULL machine constants
-# v3: config identity is the canonical AccessIR fingerprint — semantically
-#     identical configs spelled differently (list vs tuple blocks, explicit
-#     default arguments, permuted access lists) share one entry, and two
-#     different address streams can never alias one key
-_KEY_VERSION = 3
-# cache misses are estimated in chunks of this size through estimate_many: large
-# enough to amortize the hoisted invariants, small enough that an interrupted
-# sweep loses at most one chunk of store writes
-_BATCH_CHUNK = 32
-
-
-def _fits_tag(fits: CapacityFits) -> str:
-    """Short stable fingerprint of the capacity-model parameters, so sweeps with
-    different calibrations never share cache entries."""
-    blob = canonical_key(fits=dataclasses.asdict(fits))
-    return hashlib.sha1(blob.encode()).hexdigest()[:12]
-
-
-def _machine_tag(machine) -> str:
-    """Short stable fingerprint of EVERY machine constant, not just the name:
-    a ``dataclasses.replace``'d variant that keeps its name (re-measured
-    bandwidth, hypothetical cache size) must miss, never alias stale entries."""
-    blob = canonical_key(machine=dataclasses.asdict(machine))
-    return hashlib.sha1(blob.encode()).hexdigest()[:12]
-
-
-# --------------------------------------------------------------------------- #
-# (de)serialization: full estimate + prediction round-trip through the store,
-# so cache hits reconstruct the exact RankedConfig a live estimate would yield
-# (json floats round-trip exactly via repr, preserving sort order).
-
-
-def _retuple(obj):
-    """JSON arrays -> tuples, recursively (configs store tuples as lists)."""
-    if isinstance(obj, list):
-        return tuple(_retuple(v) for v in obj)
-    if isinstance(obj, dict):
-        return {k: _retuple(v) for k, v in obj.items()}
-    return obj
-
-
-def _gpu_payload(rc: RankedConfig) -> dict:
-    est = dataclasses.asdict(rc.estimate)
-    est.pop("detail", None)  # diagnostic scratch; not part of the cached contract
-    return {
-        "config": rc.config,
-        "estimate": est,
-        "prediction": dataclasses.asdict(rc.prediction),
-    }
-
-
-def _gpu_from_payload(payload: dict) -> RankedConfig:
-    est = _retuple(payload["estimate"])
-    est.setdefault("detail", {})
-    est["detail"] = dict(est["detail"])
-    pred = _retuple(payload["prediction"])
-    return RankedConfig(
-        config=_retuple(dict(payload["config"])),
-        estimate=VolumeEstimate(**est),
-        prediction=Prediction(**pred),
-    )
-
-
-def gpu_metrics(rc: RankedConfig, machine: GPUMachine) -> dict:
-    """Flat metric dict for Pareto ranking and reporting."""
-    est, pred = rc.estimate, rc.prediction
-    bx, by, bz = est.block
-    block_threads = bx * by * bz
-    occupancy = (
-        est.wave_blocks * block_threads / (machine.n_sm * machine.max_threads_per_sm)
-        if machine.n_sm
-        else 0.0
-    )
-    return {
-        "glups": pred.glups,
-        "time_s": pred.time,
-        "limiter": pred.limiter,
-        "v_dram": est.v_dram,
-        "v_dram_load": est.v_dram_load,
-        "v_l2l1": est.v_l2l1,
-        "l1_cycles": est.l1_cycles,
-        "occupancy": occupancy,
-        "l1_oversubscription": est.l1_oversubscription,
-        "l2_oversubscription": est.l2_oversubscription,
-        "wave_blocks": est.wave_blocks,
-    }
-
-
-def _tpu_metrics(est) -> dict:
-    return {
-        "time_s": est.time,
-        "limiter": est.limiter,
-        "feasible": est.feasible,
-        "vmem_bytes": est.vmem_bytes,
-        "hbm_bytes": est.hbm_bytes,
-        "hbm_redundant": est.hbm_redundant,
-        "layout_efficiency": est.layout_efficiency,
-    }
-
-
-# --------------------------------------------------------------------------- #
-
-
-@dataclass
-class SweepRecord:
-    """One estimated configuration with flat metrics; `ranked` on the GPU path."""
-
-    config: dict
-    metrics: dict
-    ranked: RankedConfig | None = None
-    from_cache: bool = False
-
-
-@dataclass(frozen=True)
-class SweepStats:
-    candidates: int
-    evaluated: int
-    cache_hits: int
-    pruned: int
-    wall_s: float
-
-
-@dataclass
-class SweepResult:
-    kernel: str
-    backend: str
-    machine: str
-    method: str
-    records: list[SweepRecord]  # sorted best-first
-    stats: SweepStats
-    prune_report: PruneReport | None = None
-    space_report: FilterReport | None = None
-    store_path: str | None = None
-
-    @property
-    def ranked(self) -> list[RankedConfig]:
-        """GPU-backend results as core/ranking.py RankedConfigs, best-first."""
-        return [r.ranked for r in self.records if r.ranked is not None]
-
-    def _feasible(self) -> list[SweepRecord]:
-        """Records eligible for selection: TPU-backend configs that failed the
-        VMEM gate (``feasible=False``, ``time_s=inf``) stay in ``records`` for
-        accounting but must never be *recommended* — an infeasible config can
-        otherwise survive the frontier via min-VMEM/max-layout objectives."""
-        return [r for r in self.records if r.metrics.get("feasible", True)]
-
-    def top(self, k: int = 5) -> list[SweepRecord]:
-        return self._feasible()[:k]
-
-    def pareto(self, objectives=None) -> list[SweepRecord]:
-        if objectives is None:
-            objectives = (
-                pareto_mod.GPU_OBJECTIVES
-                if self.backend == "gpu"
-                else pareto_mod.TPU_OBJECTIVES
-            )
-        feasible = self._feasible()
-        idx = pareto_mod.pareto_front([r.metrics for r in feasible], objectives)
-        return [feasible[i] for i in idx]
-
-
-# --------------------------------------------------------------------------- #
-# process-pool worker: rebuilds everything from picklable (name, configs) args;
-# each worker runs its chunk through the batched fast path with its own
-# EstimateCache (hoisted invariants are shared within the chunk)
-
-
-def _eval_gpu_batch_worker(args) -> list[tuple[dict, VolumeEstimate, Prediction]]:
-    kernel_name, cfgs, machine, fits, method = args
-    build = get_kernel(kernel_name).build
-    specs = [build(**cfg) for cfg in cfgs]
-    ests = estimate_many(specs, machine, fits, method=method)
-    return [
-        (cfg, est, predict(spec, est, machine))
-        for cfg, spec, est in zip(cfgs, specs, ests)
-    ]
-
-
-def _resolve(
-    kernel, backend: str | None = None
-) -> tuple[str, KernelEntry | None, Callable | None, Callable | None]:
-    """kernel argument -> (name, registry entry, gpu builder, IR builder).
-
-    Custom builder callables have no IR builder; the engine recovers their
-    canonical IR from the built spec (``frontend.lower.from_kernel_spec``), so
-    even lambdas/closures get a stable store identity — the key is the address
-    expressions themselves, not the builder's name.
-    """
-    if isinstance(kernel, str):
-        entry = get_kernel(kernel, backend=backend)
-        return entry.name, entry, entry.build, entry.build_ir
-    if backend not in (None, "gpu"):
-        raise ValueError(
-            f"custom builder callables are GPU spec builders; backend={backend!r} "
-            "is only resolvable for registry kernel names"
-        )
-    mod = getattr(kernel, "__module__", None)
-    qual = getattr(kernel, "__qualname__", "<custom>")
-    return (f"{mod}.{qual}" if mod else qual), None, kernel, None
+from ..core.record import gpu_metrics, tpu_metrics as _tpu_metrics  # noqa: F401 (compat)
+from .space import SearchSpace
+from .store import ResultStore
+from .study import (  # noqa: F401 (compat re-exports)
+    Study,
+    SweepRecord,
+    SweepResult,
+    SweepStats,
+    _eval_gpu_batch_worker,
+    _fits_tag,
+    _machine_tag,
+    _resolve,
+    sort_records,
+)
 
 
 def sweep(
@@ -257,261 +49,31 @@ def sweep(
     cache: EstimateCache | None = None,
     backend: str | None = None,
 ) -> SweepResult:
-    """Explore a configuration space through the estimator, best-first.
+    """Deprecated: single-machine :class:`~repro.explore.study.Study` shim.
 
-    ``kernel`` is a registry name (``repro.explore.registry.KERNELS``) or a GPU
-    spec builder callable ``(**config) -> KernelSpec``; ``backend`` resolves a
-    kernel family to its gpu/tpu entry (``sweep("attention", backend="tpu")``).
-    With a ``store``, all previously estimated configs are cache hits and the
-    sweep is resumable; store keys are the canonical AccessIR fingerprint of
-    each configuration, so any spelling that lowers to the same address
-    expressions is a hit.  ``workers > 0`` spreads cache-miss chunks over a
-    process pool (registry kernels only; custom callables run serially to stay
-    picklability-agnostic).  Estimation always goes through the batched
-    ``estimate_many`` fast path; pass an
-    :class:`~repro.core.estimator.EstimateCache` to share its hoisted
-    machine-independent invariants across sweeps (e.g. a cross-machine
-    comparison — serial path only, process-pool workers keep their own).
+    Parameters and results are unchanged (``SweepResult`` over the unified
+    record schema); ``sweep(k, machine=m, ...)`` is exactly
+    ``Study(k, machine=m, ...).result()``.
     """
-    t0 = time.perf_counter()
-    name, entry, build, build_ir = _resolve(kernel, backend)
-    if entry is not None and entry.backend == "tpu":
-        if prune or sample is not None:
-            raise ValueError(
-                "prune/sample are not supported for TPU-backend kernels; "
-                "pass an explicit PallasConfig list via configs= instead"
-            )
-        return _sweep_tpu(name, entry, configs, machine, store, t0)
-    if build is None:
-        raise ValueError(f"kernel {name!r} has no GPU builder")
-    if isinstance(machine, str):
-        machine = get_machine(machine)
-    if machine is None:
-        machine = get_machine(entry.default_machine if entry else "V100")
-    if not isinstance(machine, GPUMachine):
-        raise ValueError(
-            f"kernel {name!r} uses the GPU (paper §III) estimator, which needs a "
-            f"GPUMachine; got {machine.name!r}"
-        )
-    if fits is None:
-        fits = machine.fits  # per-architecture capacity-miss calibration
-
-    space_report: FilterReport | None = None
-    if configs is None:
-        if space is None:
-            if entry is None or entry.space is None:
-                raise ValueError(f"no search space registered for kernel {name!r}")
-            space = entry.space()
-        space_report = FilterReport()
-        configs = space.configs(space_report)
-    configs = [dict(c) for c in configs]
-    if sample is not None:
-        configs = subsample(configs, sample, seed)
-    n_candidates = len(configs)
-
-    if cache is None:
-        cache = EstimateCache()
-
-    # specs built once: pruning and estimation share them (and the cache, so
-    # the bound's bank-conflict cycles are reused by the full estimate)
-    specs_by_idx: dict[int, object] = {}
-    prune_report: PruneReport | None = None
-    if prune:
-        specs = [build(**cfg) for cfg in configs]
-        configs, prune_report = prune_configs(
-            build, configs, machine, keep_fraction=keep_fraction,
-            specs=specs, cache=cache,
-        )
-        kept = prune_report.kept_indices or []
-        specs_by_idx = {new_i: specs[old_i] for new_i, old_i in enumerate(kept)}
-
-    if isinstance(store, (str, bytes)) or hasattr(store, "__fspath__"):
-        store = ResultStore(store)
-
-    fits_tag = _fits_tag(fits)
-    machine_tag = _machine_tag(machine)
-
-    def _fingerprint_key(ir) -> str:
-        return canonical_key(
-            v=_KEY_VERSION,
-            ir=ir_fingerprint(ir),
-            machine=machine.name,
-            mconst=machine_tag,
-            method=method,
-            fits=fits_tag,
-        )
-
-    def key_of_spec(spec) -> str:
-        """Store key of an already-built spec (pruning prebuilds them)."""
-        return _fingerprint_key(from_kernel_spec(spec))
-
-    def key_and_spec(cfg: dict):
-        """Store key (the canonical AccessIR fingerprint) + the spec it hashes.
-
-        The fingerprint hashes the lowered address expressions themselves, so
-        benign spelling differences (list vs tuple, explicit defaults) share
-        one entry while any semantic difference — including a changed closure
-        in a custom builder — keys apart.  One builder invocation per config:
-        the spec built here is reused by the serial miss path below.
-        """
-        if build_ir is not None:
-            ir = build_ir(**cfg)
-            return _fingerprint_key(ir), lower_gpu(ir)
-        spec = build(**cfg)
-        return _fingerprint_key(from_kernel_spec(spec)), spec
-
-    records: list[SweepRecord | None] = [None] * len(configs)
-    misses: list[tuple[int, dict, str | None]] = []
-    cache_hits = 0
-    for i, cfg in enumerate(configs):
-        key = None
-        if store is not None:
-            spec = specs_by_idx.get(i)  # pruning already built this one
-            if spec is None:
-                key, spec = key_and_spec(cfg)
-                specs_by_idx[i] = spec
-            else:
-                key = key_of_spec(spec)
-        payload = store.get(key) if store is not None else None
-        if payload is not None:
-            specs_by_idx.pop(i, None)  # hit: spec not needed, bound memory
-            rc = _gpu_from_payload(payload)
-            records[i] = SweepRecord(
-                config=rc.config,
-                metrics=gpu_metrics(rc, machine),
-                ranked=rc,
-                from_cache=True,
-            )
-            cache_hits += 1
-        else:
-            misses.append((i, cfg, key))
-
-    def commit(i: int, key: str | None, rc: RankedConfig) -> None:
-        """Record + persist one result as soon as it lands, so an interrupted
-        sweep keeps everything estimated so far (mid-sweep resumability)."""
-        records[i] = SweepRecord(
-            config=rc.config, metrics=gpu_metrics(rc, machine), ranked=rc
-        )
-        if store is not None:
-            store.put(key, _gpu_payload(rc), machine=machine.name)
-
-    use_pool = workers and workers > 0 and entry is not None and len(misses) > 1
-    if use_pool:
-        # chunk so each worker message amortizes the batch path's hoisting
-        per_worker = -(-len(misses) // workers)
-        size = max(1, min(_BATCH_CHUNK, per_worker))
-        chunks = [misses[i : i + size] for i in range(0, len(misses), size)]
-        with ProcessPoolExecutor(max_workers=workers) as pool:
-            args = [(name, [cfg for _, cfg, _ in ch], machine, fits, method) for ch in chunks]
-            for ch, results in zip(chunks, pool.map(_eval_gpu_batch_worker, args)):
-                for (i, _, key), (cfg, est, pred) in zip(ch, results):
-                    commit(i, key, RankedConfig(config=dict(cfg), estimate=est, prediction=pred))
-    else:
-        for start in range(0, len(misses), _BATCH_CHUNK):
-            chunk = misses[start : start + _BATCH_CHUNK]
-            specs = [
-                specs_by_idx.get(i) or build(**cfg) for i, cfg, _ in chunk
-            ]
-            ests = estimate_many(specs, machine, fits, method=method, cache=cache)
-            for (i, cfg, key), spec, est in zip(chunk, specs, ests):
-                commit(
-                    i,
-                    key,
-                    RankedConfig(
-                        config=dict(cfg),
-                        estimate=est,
-                        prediction=predict(spec, est, machine),
-                    ),
-                )
-
-    done = [r for r in records if r is not None]
-    # identical ordering contract with core/ranking.py: stable sort on -glups
-    done.sort(key=lambda r: -r.ranked.glups)
-    return SweepResult(
-        kernel=name,
-        backend="gpu",
-        machine=machine.name,
+    warnings.warn(
+        "repro.explore.sweep() is deprecated; use repro.explore.Study "
+        "(Study(kernel, machine=..., store=...).result())",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return Study(
+        kernel,
+        space,
+        configs=configs,
+        machine=machine,
+        backend=backend,
         method=method,
-        records=done,
-        stats=SweepStats(
-            candidates=n_candidates,
-            evaluated=len(misses),
-            cache_hits=cache_hits,
-            pruned=prune_report.dropped if prune_report else 0,
-            wall_s=time.perf_counter() - t0,
-        ),
-        prune_report=prune_report,
-        space_report=space_report,
-        store_path=str(store.path) if store is not None else None,
-    )
-
-
-def _sweep_tpu(name, entry, configs, machine, store, t0) -> SweepResult:
-    """TPU backend: Pallas BlockSpec-level estimation (core/tpu_estimator.py).
-
-    ``configs``, when given, is a list of PallasConfig candidates replacing the
-    registry default space.  Every candidate is traced to the canonical
-    AccessIR once (``frontend.pallas.trace_pallas`` — non-affine ``index_map``
-    closures raise ``NonAffineIndexMapError`` instead of silently aliasing a
-    probe-compatible affine map), which supplies both the store key (the IR
-    fingerprint, same scheme as the GPU path) and the estimator input.
-    Estimation is serial (index_map closures do not pickle); fits/method are
-    GPU-path concepts and do not apply here.
-    """
-    from ..core import tpu_estimator as te
-
-    if isinstance(machine, str):
-        machine = get_machine(machine)
-    if machine is None:
-        machine = get_machine(entry.default_machine)
-    if not isinstance(machine, TPUMachine):
-        raise ValueError(
-            f"kernel {name!r} uses the TPU (Pallas) estimator, which needs a "
-            f"TPUMachine; got {machine.name!r}"
-        )
-    if isinstance(store, (str, bytes)) or hasattr(store, "__fspath__"):
-        store = ResultStore(store)
-    cands = list(configs) if configs is not None else entry.tpu_configs()
-    machine_tag = _machine_tag(machine)
-    records: list[SweepRecord] = []
-    cache_hits = evaluated = 0
-    for cfg in cands:
-        ident = {"name": cfg.name, **cfg.meta}
-        ir = trace_pallas(cfg)
-        key = canonical_key(
-            v=_KEY_VERSION,
-            ir=ir_fingerprint(ir),
-            machine=machine.name,
-            mconst=machine_tag,
-            method="tpu",
-        )
-        payload = store.get(key) if store is not None else None
-        if payload is not None:
-            metrics = _retuple(payload["metrics"])
-            cache_hits += 1
-            records.append(
-                SweepRecord(config=_retuple(ident), metrics=dict(metrics), from_cache=True)
-            )
-            continue
-        est = te.estimate_ir(ir, machine)
-        evaluated += 1
-        metrics = _tpu_metrics(est)
-        if store is not None:
-            store.put(key, {"config": ident, "metrics": metrics}, machine=machine.name)
-        records.append(SweepRecord(config=_retuple(ident), metrics=metrics))
-    records.sort(key=lambda r: r.metrics["time_s"])
-    return SweepResult(
-        kernel=name,
-        backend="tpu",
-        machine=machine.name,
-        method="tpu",
-        records=records,
-        stats=SweepStats(
-            candidates=len(cands),
-            evaluated=evaluated,
-            cache_hits=cache_hits,
-            pruned=0,
-            wall_s=time.perf_counter() - t0,
-        ),
-        store_path=str(store.path) if store is not None else None,
-    )
+        fits=fits,
+        store=store,
+        workers=workers,
+        prune=prune,
+        keep_fraction=keep_fraction,
+        sample=sample,
+        seed=seed,
+        cache=cache,
+    ).result()

@@ -13,9 +13,10 @@ predicted time and VMEM footprint, maximise layout efficiency.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Iterable, Sequence
 
 from ..core.ranking import RankedConfig, top_k as _ranking_top_k
+from ..core.suggest import unknown_name_message
 
 GPU_OBJECTIVES: tuple[tuple[str, str], ...] = (
     ("glups", "max"),
@@ -27,6 +28,36 @@ TPU_OBJECTIVES: tuple[tuple[str, str], ...] = (
     ("vmem_bytes", "min"),
     ("layout_efficiency", "max"),
 )
+
+
+def default_objectives(backend: str) -> tuple[tuple[str, str], ...]:
+    """The backend's default Pareto objectives over the unified record schema."""
+    return GPU_OBJECTIVES if backend == "gpu" else TPU_OBJECTIVES
+
+
+def validate_objectives(objectives, available: Iterable[str]) -> None:
+    """Reject malformed or unknown objectives with a did-you-mean error.
+
+    An objective naming a metric absent from the record schema used to raise a
+    bare ``KeyError`` deep in the frontier scan (or, against an empty record
+    list, silently yield a degenerate frontier); validating against the actual
+    metric vocabulary keeps typos loud: ``pareto(objectives=[("glup", "max")])``
+    says *did you mean 'glups'?*.
+    """
+    available = set(available)
+    for obj in objectives:
+        try:
+            key, sense = obj
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"objective {obj!r} is not a (metric, 'max'|'min') pair"
+            ) from None
+        if sense not in ("max", "min"):
+            raise ValueError(
+                f"objective {(key, sense)!r}: sense must be 'max' or 'min'"
+            )
+        if key not in available:
+            raise ValueError(unknown_name_message("objective metric", key, available))
 
 
 def _oriented(metrics: dict, objectives) -> tuple[float, ...]:

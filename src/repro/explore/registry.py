@@ -37,13 +37,48 @@ from ..frontend.lower import lower_gpu
 from .space import SearchSpace, choice, exact_volume, pow2, predicate
 
 __all__ = [
+    "ESTIMATORS",
     "KERNELS",
     "MACHINES",
     "KernelEntry",
     "canonical_machine_name",
+    "get_estimator",
     "get_kernel",
     "get_machine",
 ]
+
+
+def _make_gpu_estimator(method: str = "sym", fits=None):
+    from ..core.estimator import GPUAnalyticEstimator
+
+    return GPUAnalyticEstimator(method=method, fits=fits)
+
+
+def _make_tpu_estimator(method: str = "tpu", fits=None):
+    # fits/method are GPU capacity-model concepts; the Pallas model has one
+    # deterministic method and a hard VMEM gate, so both are ignored here
+    from ..core.tpu_estimator import TPUPallasEstimator
+
+    return TPUPallasEstimator()
+
+
+# backend name -> Estimator factory (lazy imports keep pool workers light).
+# Adding a backend = implementing core.record.Estimator + registering it here
+# (plus KernelEntry rows for the kernels it can estimate) — the Study facade,
+# store schema and CLI need no changes.
+ESTIMATORS: dict[str, Callable] = {
+    "gpu": _make_gpu_estimator,
+    "tpu": _make_tpu_estimator,
+}
+
+
+def get_estimator(backend: str, method: str | None = None, fits=None):
+    """Resolve a backend name to a fresh :class:`~repro.core.record.Estimator`."""
+    factory = ESTIMATORS.get(backend)
+    if factory is None:
+        raise KeyError(unknown_name_message("backend", backend, ESTIMATORS))
+    kwargs = {} if method is None else {"method": method}
+    return factory(fits=fits, **kwargs)
 
 
 def _block_fold_space(total_threads: int, zmax: int, folds) -> SearchSpace:

@@ -22,11 +22,17 @@ write ending on ``}``) counts toward ``len()``/``keys()`` until something
 touches it — first touch falls back to an eager reload, after which contents
 match ``load_workers=0`` exactly.
 
-Schema note: the ``machine`` field (which architecture produced the record) was
-added for cross-machine exploration; records written before it existed load
-fine (the field reads as ``None``), and old readers ignore it — the cache key
-already disambiguates machines, ``machine`` exists for per-file accounting
-(:meth:`ResultStore.machines`).
+Schema notes (v4): records carry two optional provenance fields next to the
+payload — ``machine`` (which architecture produced the record, added for
+cross-machine exploration) and ``builder_version`` (the
+:data:`repro.frontend.ir.BUILDER_VERSION` token of the IR-builder pipeline
+that produced the estimate, added with the unified v4 payload schema).  Both
+are *accounting* fields: the cache key already disambiguates machines and
+builder versions, so files written before either field existed load fine (the
+fields read as ``None``) and old readers ignore them.  v3-keyed records in an
+existing file are never *hits* under v4 keys (the key string embeds the
+version), but they still load, count and survive :meth:`compact` — a re-run
+simply re-estimates and appends v4 records alongside.
 """
 from __future__ import annotations
 
@@ -44,19 +50,21 @@ def canonical_key(**parts) -> str:
     return json.dumps(parts, sort_keys=True, separators=(",", ":"), default=list)
 
 
-def _parse_store_lines(lines: list[str]) -> list[tuple[str, dict, str | None]]:
+def _parse_store_lines(lines: list[str]) -> list[tuple]:
     """Eagerly deserialize a chunk of JSONL records (module-level: picklable
     for the load pool).  Corrupt lines — the truncated tail of a killed
     sweep — skip."""
-    out: list[tuple[str, dict, str | None]] = []
+    out: list[tuple] = []
     for line in lines:
         line = line.strip()
         if not line:
             continue
         try:
             rec = json.loads(line)
-            # pre-machine-field records read as machine=None
-            out.append((rec["key"], rec["payload"], rec.get("machine")))
+            # records predating either provenance field read it as None
+            out.append(
+                (rec["key"], rec["payload"], rec.get("machine"), rec.get("builder_version"))
+            )
         except (json.JSONDecodeError, KeyError, TypeError):
             continue
     return out
@@ -97,6 +105,7 @@ class ResultStore:
         # values are parsed payload dicts, or the raw record line (lazy)
         self._mem: dict[str, dict | str] = {}
         self._machine: dict[str, str | None] = {}
+        self._builder: dict[str, object] = {}
         self._load()
 
     def _load(self) -> None:
@@ -114,18 +123,20 @@ class ResultStore:
                 if key is not None:
                     self._mem[key] = line  # payload parses lazily on get()
                     continue
-                for key, payload, machine in _parse_store_lines([line]):
+                for key, payload, machine, bv in _parse_store_lines([line]):
                     self._mem[key] = payload
                     self._machine[key] = machine
+                    self._builder[key] = bv
             return
         records = None
         if workers > 1 and len(lines) > 1:
             records = self._load_parallel(lines, workers)
         if records is None:
             records = _parse_store_lines(lines)
-        for key, payload, machine in records:
+        for key, payload, machine, bv in records:
             self._mem[key] = payload
             self._machine[key] = machine
+            self._builder[key] = bv
 
     @staticmethod
     def _load_parallel(lines, workers) -> list[tuple] | None:
@@ -161,15 +172,18 @@ class ResultStore:
         if not parsed or parsed[0][0] != key:
             self._mem.clear()
             self._machine.clear()
+            self._builder.clear()
             if self.path.exists():
                 with self.path.open() as f:
-                    for k, payload, machine in _parse_store_lines(f.readlines()):
+                    for k, payload, machine, bv in _parse_store_lines(f.readlines()):
                         self._mem[k] = payload
                         self._machine[k] = machine
+                        self._builder[k] = bv
             return self._mem.get(key)
-        _, payload, machine = parsed[0]
+        _, payload, machine, bv = parsed[0]
         self._mem[key] = payload
         self._machine[key] = machine
+        self._builder[key] = bv
         return payload
 
     def _materialize_all(self) -> None:
@@ -182,13 +196,22 @@ class ResultStore:
             return self._materialize(key)
         return v
 
-    def put(self, key: str, payload: dict, machine: str | None = None) -> None:
+    def put(
+        self,
+        key: str,
+        payload: dict,
+        machine: str | None = None,
+        builder_version: int | str | None = None,
+    ) -> None:
         self._mem[key] = payload
         self._machine[key] = machine
+        self._builder[key] = builder_version
         self.path.parent.mkdir(parents=True, exist_ok=True)
         rec: dict = {"key": key, "payload": payload}
         if machine is not None:
             rec["machine"] = machine
+        if builder_version is not None:
+            rec["builder_version"] = builder_version
         with self.path.open("a") as f:
             f.write(json.dumps(rec, default=list) + "\n")
 
@@ -210,6 +233,15 @@ class ResultStore:
             out[m] = out.get(m, 0) + 1
         return out
 
+    def builder_versions(self) -> dict:
+        """Live-entry count per IR-builder version (``None`` = pre-v4 records)."""
+        self._materialize_all()
+        out: dict = {}
+        for key in self._mem:
+            bv = self._builder.get(key)
+            out[bv] = out.get(bv, 0) + 1
+        return out
+
     def compact(self) -> None:
         """Rewrite the log with one line per live key (drops superseded writes)."""
         self._materialize_all()
@@ -219,6 +251,8 @@ class ResultStore:
                 rec: dict = {"key": key, "payload": payload}
                 if self._machine.get(key) is not None:
                     rec["machine"] = self._machine[key]
+                if self._builder.get(key) is not None:
+                    rec["builder_version"] = self._builder[key]
                 f.write(json.dumps(rec, default=list) + "\n")
         tmp.replace(self.path)
 

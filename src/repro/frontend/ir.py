@@ -40,6 +40,15 @@ import json
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
 
+# Version token of the IR builder + lowering pipeline, carried in every sweep
+# store key (and written on each store record).  Bump it whenever a builder or
+# lowering change alters the IR an unchanged config spelling would produce, so
+# payloads estimated under the old builders can never be served to the new
+# ones.  It is also the prerequisite the ROADMAP names for a config->fingerprint
+# alias layer in the store: an alias keyed on the config *spelling* is only
+# safe if the builder version it was recorded under still matches.
+BUILDER_VERSION = 1
+
 
 def _tupled(x):
     """Recursively freeze lists/tuples into tuples (spelling normalisation)."""

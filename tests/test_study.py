@@ -1,0 +1,314 @@
+"""The backend-agnostic Study facade + unified estimator protocol.
+
+Covers the API-redesign contracts:
+
+* ``Study`` subsumes ``sweep``/``compare`` (which remain as deprecation shims
+  producing identical results);
+* multi-machine ``Study.run()`` evaluates the machine-independent per-config
+  work ONCE (IR tracing counted via a wrapped builder, footprints via the
+  shared ``EstimateCache`` hit counters) and is bit-identical to N independent
+  single-machine sweeps;
+* the v4 store payload round-trips every ``SweepRecord`` field on both
+  backends, and keys carry the ``BUILDER_VERSION`` token;
+* predicted-score ties sort deterministically by config fingerprint;
+* unknown Pareto objectives fail loudly with a did-you-mean error.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.core import appspec
+from repro.core.machine import A100_40GB, TPU_V5E, TPU_V6E, V100
+from repro.core.record import record_from_payload, record_payload
+from repro.explore import Study, sweep
+from repro.explore.crossmachine import compare
+from repro.explore.study import SweepRecord, sort_records
+from repro.frontend import ir as ir_mod
+
+GRID = (128, 64, 64)  # reduced grid keeps each full estimate cheap
+
+CFGS = [
+    {"block": (32, 8, 4), "fold": (1, 1, 1)},
+    {"block": (16, 8, 8), "fold": (1, 1, 1)},
+    {"block": (128, 1, 8), "fold": (1, 2, 1)},
+    {"block": (4, 16, 16), "fold": (1, 1, 2)},
+]
+
+
+def build_small(block, fold=(1, 1, 1)):
+    return appspec.star3d(block=block, fold=fold, grid=GRID)
+
+
+def _tpu_cfgs():
+    """Small Pallas candidates: two feasible, one far beyond the VMEM gate."""
+    from repro.core import tpu_estimator as te
+
+    def cfg(name, bz):
+        return te.PallasConfig(
+            name=name,
+            grid=(256 // bz,),
+            accesses=(
+                te.BlockAccess(
+                    name="x",
+                    block_shape=(bz, 512, 128),
+                    index_map=lambda i: (i, 0, 0),
+                    dtype_bits=32,
+                ),
+            ),
+            flops_per_step=1.0,
+            is_matmul=False,
+            meta={"bz": bz},
+        )
+
+    return [cfg("small", 8), cfg("mid", 16), cfg("huge", 256)]
+
+
+# --------------------------------------------------------------------------- #
+# facade vs shims
+
+
+def test_study_single_machine_equals_sweep():
+    res = Study(build_small, configs=CFGS, machine=V100).result()
+    with pytest.warns(DeprecationWarning):
+        old = sweep(build_small, configs=CFGS, machine=V100)
+    assert [r.config for r in res.records] == [r.config for r in old.records]
+    assert [r.metrics for r in res.records] == [r.metrics for r in old.records]
+    assert res.backend == "gpu" and res.machine == V100.name
+
+
+def test_compare_shim_matches_study():
+    study = Study("stencil25", configs=CFGS, machines=["v100", "a100"])
+    cm_new = study.compare()
+    with pytest.warns(DeprecationWarning):
+        cm_old = compare("stencil25", ["v100", "a100"], configs=CFGS)
+    assert cm_new.machines == cm_old.machines == ["V100", "A100"]
+    assert cm_new.tau == cm_old.tau
+    assert [w.placements for w in cm_new.winners] == [
+        w.placements for w in cm_old.winners
+    ]
+
+
+def test_study_lazy_run_and_result_selection():
+    study = Study(build_small, configs=CFGS, machines=[V100, A100_40GB])
+    # .top() without an explicit .run() lazily executes, but needs a machine
+    with pytest.raises(ValueError, match="spans machines"):
+        study.top(2)
+    top = study.top(2, machine="v100")  # canonicalized lookup
+    assert len(top) == 2
+    with pytest.raises(KeyError, match="not part of this study"):
+        study.result("h100")
+    with pytest.raises(ValueError, match="at least two"):
+        Study(build_small, configs=CFGS, machine=V100).compare()
+
+
+# --------------------------------------------------------------------------- #
+# multi-machine fan-out: shared machine-independent work, bit-identical output
+
+
+def test_multi_machine_study_matches_independent_sweeps():
+    study = Study(build_small, configs=CFGS, machines=[V100, A100_40GB])
+    multi = study.run()
+    for machine in (V100, A100_40GB):
+        solo = Study(build_small, configs=CFGS, machine=machine).result()
+        got = multi.result(machine.name)
+        assert [r.config for r in got.records] == [r.config for r in solo.records]
+        # bit-for-bit: every metric, volume and prediction coincides
+        assert [r.metrics for r in got.records] == [r.metrics for r in solo.records]
+        assert [r.volumes for r in got.records] == [r.volumes for r in solo.records]
+        assert [r.ranked.glups for r in got.records] == [
+            r.ranked.glups for r in solo.records
+        ]
+
+
+def test_multi_machine_study_builds_each_config_once():
+    """The ROADMAP item: N machines must NOT mean N enumerations/builds — the
+    per-config IR is traced once and the machine-independent footprint work is
+    served from the shared EstimateCache on every machine after the first."""
+    calls = []
+
+    def counting_build(block, fold=(1, 1, 1)):
+        calls.append((tuple(block), tuple(fold)))
+        return build_small(block, fold)
+
+    study = Study(counting_build, configs=CFGS, machines=[V100, A100_40GB])
+    study.run()
+    assert len(calls) == len(CFGS)  # once per config, NOT per machine
+    # the second machine's L1-stage work (bank-conflict cycles, warp requests,
+    # block footprints) must be cache hits, not recomputes
+    assert study.cache.hits >= len(CFGS)
+
+
+def test_multi_machine_tpu_study_and_compare_shape():
+    study = Study("wkv_tpu", configs=_tpu_cfgs(), machines=["tpuv5e", "tpuv6e"])
+    cm = study.compare()
+    assert cm.backend == "tpu" and cm.score_metric == "time_s"
+    assert cm.machines == ["TPUv5e", "TPUv6e"]
+    assert set(cm.tau) == {("TPUv5e", "TPUv6e")}
+    assert all(w.placements[w.machine][0] == 0 for w in cm.winners)
+    # the infeasible candidate is reported but never recommended, per machine
+    for label in cm.machines:
+        res = cm.results[label]
+        assert len(res.records) == 3
+        assert {r.config["name"] for r in res.top(5)} == {"small", "mid"}
+
+
+def test_study_rejects_mixed_and_duplicate_machines():
+    with pytest.raises(ValueError, match="needs a GPUMachine"):
+        Study(build_small, configs=CFGS, machines=[V100, TPU_V5E])
+    with pytest.raises(ValueError, match="duplicate"):
+        Study(build_small, configs=CFGS, machines=["v100", "V100"])
+    with pytest.raises(ValueError, match="not both"):
+        Study(build_small, configs=CFGS, machine=V100, machines=[V100])
+
+
+# --------------------------------------------------------------------------- #
+# v4 store schema: unified payload round-trip + builder-version token
+
+
+def _roundtrip(rec):
+    blob = json.dumps(record_payload(rec), default=list)
+    return record_from_payload(json.loads(blob), fingerprint=rec.fingerprint)
+
+
+def test_v4_payload_roundtrips_gpu_records():
+    for rec in Study(build_small, configs=CFGS, machine=V100).result().records:
+        back = _roundtrip(rec)
+        assert back.config == rec.config
+        assert back.metrics == rec.metrics  # exact float round-trip via repr
+        assert back.volumes == rec.volumes
+        assert (back.time_s, back.limiter, back.feasible, back.backend) == (
+            rec.time_s,
+            rec.limiter,
+            rec.feasible,
+            rec.backend,
+        )
+        assert back.ranked.estimate == rec.ranked.estimate
+        assert back.ranked.prediction == rec.ranked.prediction
+
+
+def test_v4_payload_roundtrips_tpu_records_including_infeasible():
+    res = Study("wkv_tpu", configs=_tpu_cfgs(), machine=TPU_V6E).result()
+    assert any(not r.feasible for r in res.records)  # the huge candidate
+    for rec in res.records:
+        back = _roundtrip(rec)
+        assert back.config == rec.config
+        assert back.metrics == rec.metrics
+        assert back.volumes == rec.volumes
+        assert back.time_s == rec.time_s  # inf survives JSON
+        assert back.feasible == rec.feasible and back.ranked is None
+
+
+def test_store_records_carry_builder_version(tmp_path):
+    from repro.explore.store import ResultStore
+
+    p = tmp_path / "s.jsonl"
+    Study(build_small, configs=CFGS[:2], machine=V100, store=p).run()
+    lines = [json.loads(x) for x in p.read_text().splitlines()]
+    assert all(rec["builder_version"] == ir_mod.BUILDER_VERSION for rec in lines)
+    assert ResultStore(p).builder_versions() == {ir_mod.BUILDER_VERSION: 2}
+
+
+def test_builder_version_bump_invalidates_keys(tmp_path, monkeypatch):
+    """The alias-layer prerequisite: estimates recorded under one builder
+    version must never be served under another — the token is part of the key
+    derivation, so a bump misses instead of aliasing."""
+    p = tmp_path / "s.jsonl"
+    Study(build_small, configs=CFGS[:1], machine=V100, store=p).run()
+    hit = Study(build_small, configs=CFGS[:1], machine=V100, store=p).result()
+    assert hit.stats.cache_hits == 1 and hit.stats.evaluated == 0
+    monkeypatch.setattr(ir_mod, "BUILDER_VERSION", ir_mod.BUILDER_VERSION + 1)
+    miss = Study(build_small, configs=CFGS[:1], machine=V100, store=p).result()
+    assert miss.stats.cache_hits == 0 and miss.stats.evaluated == 1
+
+
+def test_stores_keys_accept_any_machine_spelling(tmp_path):
+    """stores= keys canonicalize like machines= entries do — a lowercase key
+    must not silently drop the store (losing all persistence)."""
+    stores = {"v100": tmp_path / "v.jsonl", "A100-SXM4-40GB": tmp_path / "a.jsonl"}
+    res = Study(
+        build_small, configs=CFGS[:1], machines=["v100", "a100"], stores=stores
+    ).run()
+    for label in res.machines:
+        assert res.results[label].store_path is not None
+    assert (tmp_path / "v.jsonl").exists() and (tmp_path / "a.jsonl").exists()
+
+
+def test_compare_fails_fast_on_single_machine_study(tmp_path):
+    """compare() on a one-machine study must raise BEFORE estimating anything
+    (the machine count is known at construction)."""
+    study = Study(build_small, configs=CFGS, machine=V100, store=tmp_path / "s.jsonl")
+    with pytest.raises(ValueError, match="at least two"):
+        study.compare()
+    assert not (tmp_path / "s.jsonl").exists()  # nothing ran, nothing persisted
+
+
+def test_study_resume_is_incremental(tmp_path):
+    p = tmp_path / "s.jsonl"
+    first = Study(build_small, configs=CFGS[:2], machine=V100, store=p)
+    assert first.result().stats.evaluated == 2
+    # a later study over a superset pays only for what is missing
+    second = Study(build_small, configs=CFGS, machine=V100, store=str(p))
+    res = second.result()
+    assert res.stats.cache_hits == 2 and res.stats.evaluated == 2
+    # .resume() reloads from disk and re-runs: everything is now a hit
+    resumed = second.resume().result()
+    assert resumed.stats.cache_hits == 4 and resumed.stats.evaluated == 0
+    assert [r.config for r in resumed.records] == [r.config for r in res.records]
+    assert [r.metrics for r in resumed.records] == [r.metrics for r in res.records]
+
+
+# --------------------------------------------------------------------------- #
+# deterministic tie ordering
+
+
+def _tied_record(fp: str, glups: float, backend: str = "gpu") -> SweepRecord:
+    return SweepRecord(
+        config={"fp": fp},
+        backend=backend,
+        time_s=1.0 / glups,
+        limiter="DRAM",
+        feasible=True,
+        volumes={},
+        metrics={"glups": glups, "time_s": 1.0 / glups},
+        fingerprint=fp,
+    )
+
+
+def test_score_ties_break_on_fingerprint_not_input_order():
+    a, b, c = _tied_record("aaa", 10.0), _tied_record("bbb", 10.0), _tied_record("ccc", 12.0)
+    for order in ([a, b, c], [b, a, c], [c, b, a]):
+        recs = list(order)
+        sort_records(recs, "gpu")
+        # best score first; the 10.0 tie always resolves the same way
+        assert [r.fingerprint for r in recs] == ["ccc", "bbb", "aaa"]
+    t1, t2 = _tied_record("xxx", 5.0, "tpu"), _tied_record("yyy", 5.0, "tpu")
+    for order in ([t1, t2], [t2, t1]):
+        recs = list(order)
+        sort_records(recs, "tpu")
+        assert [r.fingerprint for r in recs] == ["yyy", "xxx"]
+
+
+# --------------------------------------------------------------------------- #
+# pareto objective validation
+
+
+def test_pareto_rejects_unknown_objectives_with_suggestion():
+    res = Study(build_small, configs=CFGS, machine=V100).result()
+    with pytest.raises(ValueError, match="did you mean 'glups'"):
+        res.pareto(objectives=(("glup", "max"),))
+    with pytest.raises(ValueError, match="'max' or 'min'"):
+        res.pareto(objectives=(("glups", "maximize"),))
+    with pytest.raises(ValueError, match="not a \\(metric"):
+        res.pareto(objectives=("glups",))
+    # valid custom objectives still work
+    front = res.pareto(objectives=(("glups", "max"), ("v_dram", "min")))
+    assert res.records[0].config in [r.config for r in front]
+
+
+def test_pareto_rejects_gpu_objectives_on_tpu_records():
+    res = Study("wkv_tpu", configs=_tpu_cfgs(), machine=TPU_V5E).result()
+    with pytest.raises(ValueError, match="unknown objective metric"):
+        res.pareto(objectives=(("glups", "max"),))
+    assert {r.config["name"] for r in res.pareto()} <= {"small", "mid"}
