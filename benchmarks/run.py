@@ -261,12 +261,18 @@ def sweep_throughput():
     Each measurement is the best of ``reps`` runs (min wall time).  The JSON
     artifact starts the perf trajectory for the engine: ``speedup_cold`` is
     the batched-vs-per-config ratio the tentpole is accountable for (>= 5x).
+
+    The artifact also carries a ``phases`` entry: per-phase wall time of one
+    *traced* cold sweep (repro.obs spans: enumerate, IR trace, store lookup,
+    estimate batches, sort, store append), measured outside the timed reps so
+    tracing overhead never touches the throughput numbers.
     """
     import tempfile
 
     from repro.core import appspec, estimator
     from repro.explore import Study
     from repro.explore.store import ResultStore
+    from repro.obs import trace as obs_trace
 
     kernel, reps = "stencil25", 2
     cfgs = appspec.stencil_config_space()
@@ -302,6 +308,16 @@ def sweep_throughput():
         n_lines = n_rep * len(recs)
         t_load_serial, _ = best_of(lambda: ResultStore(big, load_workers=0))
         t_load_lazy, _ = best_of(lambda: ResultStore(big))  # lazy key-scan
+        # phase breakdown: one traced cold sweep against a fresh store so the
+        # trace covers the whole pipeline (enumerate -> IR trace -> lookup ->
+        # estimate -> sort -> append)
+        tracer = obs_trace.enable()
+        traced = Study(kernel, store=os.path.join(d, "traced.jsonl")).result()
+        span_s: dict[str, float] = {}
+        for ev in tracer.events:
+            if ev.get("ph") == "X":
+                span_s[ev["name"]] = span_s.get(ev["name"], 0.0) + ev["dur"] / 1e6
+        obs_trace.disable()
     n = len(cfgs)
     payload = {
         "kernel": kernel,
@@ -319,6 +335,10 @@ def sweep_throughput():
         "store_load_serial_s": t_load_serial,
         "store_load_lazy_s": t_load_lazy,
         "store_load_speedup": t_load_serial / max(t_load_lazy, 1e-9),
+        "phases": {
+            "wall_s": round(traced.stats.wall_s, 6),
+            "span_seconds": {k: round(v, 6) for k, v in sorted(span_s.items())},
+        },
     }
     with open("BENCH_sweep.json", "w") as f:
         json.dump(payload, f, indent=2)

@@ -32,6 +32,8 @@ from typing import Callable, Iterable, Sequence
 
 import numpy as np
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from . import footprint as fp_enum
 from . import symset as fp_sym
 from .address import KernelSpec, ThreadBox
@@ -506,15 +508,31 @@ class GPUAnalyticEstimator:
 
         fits = self.fits if self.fits is not None else machine.fits
         irs = list(irs)
-        ready = list(specs) if specs is not None else [None] * len(irs)
-        ready = [s if s is not None else lower_gpu(ir) for s, ir in zip(ready, irs)]
-        ests = estimate_many(ready, machine, fits, method=self.method, cache=cache)
-        if configs is None:
-            configs = [{"name": ir.name, **ir.meta} for ir in irs]
-        return [
-            gpu_record(cfg, est, predict(spec, est, machine), machine)
-            for cfg, spec, est in zip(configs, ready, ests)
-        ]
+        if cache is None:
+            cache = EstimateCache()
+        h0, m0 = cache.hits, cache.misses
+        with obs_trace.span(
+            "estimate.batch", backend="gpu", machine=machine.name, size=len(irs)
+        ) as sp:
+            ready = list(specs) if specs is not None else [None] * len(irs)
+            ready = [s if s is not None else lower_gpu(ir) for s, ir in zip(ready, irs)]
+            ests = estimate_many(ready, machine, fits, method=self.method, cache=cache)
+            if configs is None:
+                configs = [{"name": ir.name, **ir.meta} for ir in irs]
+            out = [
+                gpu_record(cfg, est, predict(spec, est, machine), machine)
+                for cfg, spec, est in zip(configs, ready, ests)
+            ]
+            sp.set(cache_hits=cache.hits - h0, cache_misses=cache.misses - m0)
+        obs_metrics.histogram("estimate.batch_size", backend="gpu").observe(len(irs))
+        obs_metrics.histogram("estimate.batch_seconds", backend="gpu").observe(
+            sp.duration_s
+        )
+        obs_metrics.counter("estimate.cache_hits", backend="gpu").inc(cache.hits - h0)
+        obs_metrics.counter("estimate.cache_misses", backend="gpu").inc(
+            cache.misses - m0
+        )
+        return out
 
 
 def estimate_many(

@@ -40,6 +40,8 @@ import numpy as np
 
 from ..frontend.ir import AccessIR
 from ..frontend.pallas import trace_pallas
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .machine import TPU_V5E, TPUMachine
 
 
@@ -250,10 +252,18 @@ class TPUPallasEstimator:
         irs = list(irs)
         if configs is None:
             configs = [{"name": ir.name, **ir.meta} for ir in irs]
-        return [
-            tpu_record(cfg, estimate_ir(ir, machine))
-            for cfg, ir in zip(configs, irs)
-        ]
+        with obs_trace.span(
+            "estimate.batch", backend="tpu", machine=machine.name, size=len(irs)
+        ) as sp:
+            out = [
+                tpu_record(cfg, estimate_ir(ir, machine))
+                for cfg, ir in zip(configs, irs)
+            ]
+        obs_metrics.histogram("estimate.batch_size", backend="tpu").observe(len(irs))
+        obs_metrics.histogram("estimate.batch_seconds", backend="tpu").observe(
+            sp.duration_s
+        )
+        return out
 
 
 def rank_configs(

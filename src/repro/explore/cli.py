@@ -18,6 +18,7 @@ import argparse
 import json
 import sys
 
+from ..obs import trace as obs_trace
 from .crossmachine import default_stores
 from .registry import (
     KERNELS,
@@ -64,7 +65,43 @@ def _build_parser() -> argparse.ArgumentParser:
     p.add_argument("--pareto", action="store_true", help="also print the Pareto frontier")
     p.add_argument("--json", action="store_true", dest="as_json",
                    help="machine-readable JSON summary instead of tables")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="export a Chrome-trace/Perfetto JSON of the sweep's phase "
+                        "structure to PATH (load in ui.perfetto.dev or chrome://tracing)")
+    p.add_argument("--explain", default=None, metavar="CFG",
+                   help="provenance report for one config: 'best', a rank index into "
+                        "the sorted records, or a config JSON dict, e.g. "
+                        "'{\"block\": [32, 2, 8], \"fold\": [1, 1, 1]}' (pruned "
+                        "configs are estimated on demand)")
     return p
+
+
+def _errmsg(e: BaseException) -> str:
+    """One exception-formatting path for the whole CLI: the first exception
+    argument when there is one (KeyError keeps its message there, and str()
+    would re-quote it), repr() otherwise — an arg-less exception's str() is
+    the empty string, and the old bare ``e.args[0]`` raised IndexError."""
+    return str(e.args[0]) if e.args else repr(e)
+
+
+def _fail(e: BaseException | str) -> int:
+    """Print one normalized ``error:`` line to stderr; returns the exit code."""
+    print(f"error: {e if isinstance(e, str) else _errmsg(e)}", file=sys.stderr)
+    return 2
+
+
+def _export_trace(path: str) -> None:
+    """Export + disable the active tracer (stderr note keeps --json stdout clean)."""
+    tracer = obs_trace.active()
+    if tracer is None:
+        return
+    n = tracer.export(path)
+    obs_trace.disable()
+    print(
+        f"trace: {n} events -> {path} "
+        "(load in ui.perfetto.dev or chrome://tracing)",
+        file=sys.stderr,
+    )
 
 
 def _fmt_cfg(cfg: dict) -> str:
@@ -165,34 +202,40 @@ def main(argv: list[str] | None = None) -> int:
             print(f"{name:16s} [{e.family}/{e.backend}] {e.describe}")
         return 0
     if not args.kernel:
-        print("error: --kernel is required (see --list)", file=sys.stderr)
-        return 2
+        return _fail("--kernel is required (see --list)")
     if args.machine and args.machines:
-        print("error: --machine and --machines are mutually exclusive", file=sys.stderr)
-        return 2
+        return _fail("--machine and --machines are mutually exclusive")
     if args.store and args.machines:
-        print(
-            "error: --store names ONE file; --machines keeps one store per "
+        return _fail(
+            "--store names ONE file; --machines keeps one store per "
             "machine at results/explore/<kernel>__<machine>__<method>.jsonl "
-            "(use --no-store to disable caching)",
-            file=sys.stderr,
+            "(use --no-store to disable caching)"
         )
-        return 2
     try:
         entry = get_kernel(args.kernel, backend=args.backend)
     except KeyError as e:
-        print(f"error: {e.args[0]}", file=sys.stderr)
-        return 2
+        return _fail(e)
     # the TPU backend has one estimation method; label its store accordingly
     method = args.method if entry.backend == "gpu" else "tpu"
+    if args.trace:
+        obs_trace.enable()
+    try:
+        return _run(args, entry, method)
+    finally:
+        # export whatever was traced, even when the run errored partway —
+        # a partial trace of a failed sweep is exactly when one wants it
+        if args.trace:
+            _export_trace(args.trace)
 
+
+def _run(args, entry, method: str) -> int:
     if args.machines:
         try:
             names = [canonical_machine_name(m) for m in args.machines.split(",") if m]
             stores = None
             if not args.no_store:
                 stores = default_stores(entry.name, names, method)
-            cm = Study(
+            study = Study(
                 entry.name,
                 machines=names,
                 method=args.method,
@@ -202,31 +245,42 @@ def main(argv: list[str] | None = None) -> int:
                 keep_fraction=args.keep_fraction,
                 sample=args.sample,
                 seed=args.seed,
-            ).compare()
+            )
+            cm = study.compare()
         except (ValueError, KeyError) as e:
-            print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
-            return 2
+            return _fail(e)
+        report = None
+        if args.explain is not None:
+            try:
+                report = study.explain(args.explain)
+            except (ValueError, KeyError, IndexError, TypeError) as e:
+                return _fail(e)
         if args.as_json:
-            print(json.dumps(cm.summary(args.top), indent=2, default=list))
+            out = cm.summary(args.top)
+            if report is not None:
+                out["explain"] = report.to_json()
+            print(json.dumps(out, indent=2, default=list))
             return 0
         print(f"cross-machine exploration of {cm.kernel} over {', '.join(cm.machines)} "
               f"({len(next(iter(cm.results.values())).records)} common-space configs per machine)")
         _print_cross(cm, args.top, args.pareto)
+        if report is not None:
+            print()
+            print(report.render())
         return 0
 
     try:
         machine_key = canonical_machine_name(args.machine or entry.default_machine)
         get_machine(machine_key)
     except KeyError as e:
-        print(f"error: {e.args[0]}", file=sys.stderr)
-        return 2
+        return _fail(e)
     store = None
     if not args.no_store:
         store = ResultStore(
             args.store or ResultStore.default_path(entry.name, machine_key, method)
         )
     try:
-        res = Study(
+        study = Study(
             entry.name,
             machine=machine_key,
             method=args.method,
@@ -236,12 +290,21 @@ def main(argv: list[str] | None = None) -> int:
             keep_fraction=args.keep_fraction,
             sample=args.sample,
             seed=args.seed,
-        ).result()
+        )
+        res = study.result()
     except (ValueError, KeyError) as e:
-        print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
-        return 2
+        return _fail(e)
+    report = None
+    if args.explain is not None:
+        try:
+            report = study.explain(args.explain)
+        except (ValueError, KeyError, IndexError, TypeError) as e:
+            return _fail(e)
     if args.as_json:
-        print(json.dumps(_summary(res, args.top), indent=2, default=list))
+        out = _summary(res, args.top)
+        if report is not None:
+            out["explain"] = report.to_json()
+        print(json.dumps(out, indent=2, default=list))
         return 0
     s = res.stats
     print(f"exploring {res.kernel} on {res.machine} (method={res.method}): "
@@ -260,4 +323,7 @@ def main(argv: list[str] | None = None) -> int:
         front = res.pareto()
         print(f"\npareto front ({len(front)} non-dominated configs):")
         printer(front)
+    if report is not None:
+        print()
+        print(report.render())
     return 0

@@ -15,6 +15,7 @@ import warnings
 from typing import Sequence
 
 from ..core.machine import GPUMachine, TPUMachine
+from ..obs import metrics as obs_metrics
 from .registry import get_kernel
 from .store import ResultStore
 from .study import (  # noqa: F401 (compat re-exports)
@@ -47,6 +48,8 @@ def compare(
     tau is now computed over the *feasible* common configs only (infeasible
     records score ``inf`` and used to inject NaN comparisons into the tau).
     """
+    # counted so the planned shim removal can be data-driven (see engine.sweep)
+    obs_metrics.counter("deprecated.calls", api="crossmachine.compare").inc()
     warnings.warn(
         "repro.explore.compare() is deprecated; use repro.explore.Study "
         "(Study(kernel, machines=[...]).compare())",

@@ -18,6 +18,7 @@ from ..core.capacity import CapacityFits
 from ..core.estimator import EstimateCache
 from ..core.machine import GPUMachine, TPUMachine
 from ..core.record import gpu_metrics, tpu_metrics as _tpu_metrics  # noqa: F401 (compat)
+from ..obs import metrics as obs_metrics
 from .space import SearchSpace
 from .store import ResultStore
 from .study import (  # noqa: F401 (compat re-exports)
@@ -55,6 +56,9 @@ def sweep(
     record schema); ``sweep(k, machine=m, ...)`` is exactly
     ``Study(k, machine=m, ...).result()``.
     """
+    # counted so the planned shim removal can be data-driven (grep a run's
+    # metrics snapshot for deprecated.calls before deleting the API)
+    obs_metrics.counter("deprecated.calls", api="engine.sweep").inc()
     warnings.warn(
         "repro.explore.sweep() is deprecated; use repro.explore.Study "
         "(Study(kernel, machine=..., store=...).result())",

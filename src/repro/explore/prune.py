@@ -32,6 +32,7 @@ from ..core.bankconflict import block_l1_cycles
 from ..core.estimator import EstimateCache
 from ..core.machine import V100, GPUMachine
 from ..core.waves import interior_block_box
+from ..obs import metrics as obs_metrics
 
 def compulsory_bytes_per_lup(spec: KernelSpec) -> float:
     """Streaming lower bound on DRAM traffic: each field accessed by the kernel
@@ -145,6 +146,7 @@ def prune_configs(
         reason = sanity_reason(spec, machine)
         if reason is not None:
             report.sanity_dropped[reason] = report.sanity_dropped.get(reason, 0) + 1
+            obs_metrics.counter("prune.dropped", rule="sanity").inc()
             continue
         survivors.append((i, cfg, upper_bound_glups(spec, machine, cache=cache)))
     if not survivors:
@@ -156,6 +158,8 @@ def prune_configs(
     kept = sorted((i, cfg) for i, cfg, b in survivors if b >= cutoff)
     # bound ties can push us past n_keep; that is fine (never drops a tied config)
     report.bound_dropped = len(survivors) - len(kept)
+    if report.bound_dropped:
+        obs_metrics.counter("prune.dropped", rule="roofline").inc(report.bound_dropped)
     report.kept = len(kept)
     report.kept_indices = [i for i, _ in kept]
     return [cfg for _, cfg in kept], report

@@ -41,6 +41,9 @@ import os
 from pathlib import Path
 from typing import Iterator
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
+
 _KEY_PREFIX = '{"key":'
 _DECODER = json.JSONDecoder()
 
@@ -109,6 +112,13 @@ class ResultStore:
         self._load()
 
     def _load(self) -> None:
+        with obs_trace.span("store.load", path=str(self.path)) as sp:
+            self._load_inner()
+            sp.set(entries=len(self._mem))
+        obs_metrics.histogram("store.load_seconds").observe(sp.duration_s)
+        obs_metrics.counter("store.loads").inc()
+
+    def _load_inner(self) -> None:
         if not self.path.exists():
             return
         with self.path.open() as f:
@@ -203,17 +213,22 @@ class ResultStore:
         machine: str | None = None,
         builder_version: int | str | None = None,
     ) -> None:
-        self._mem[key] = payload
-        self._machine[key] = machine
-        self._builder[key] = builder_version
-        self.path.parent.mkdir(parents=True, exist_ok=True)
-        rec: dict = {"key": key, "payload": payload}
-        if machine is not None:
-            rec["machine"] = machine
-        if builder_version is not None:
-            rec["builder_version"] = builder_version
-        with self.path.open("a") as f:
-            f.write(json.dumps(rec, default=list) + "\n")
+        # span granularity: one append per estimated config — a disabled span
+        # is two perf_counter calls, and the always-on latency histogram is
+        # what the phase breakdown in BENCH_sweep.json reads
+        with obs_trace.span("store.append") as sp:
+            self._mem[key] = payload
+            self._machine[key] = machine
+            self._builder[key] = builder_version
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            rec: dict = {"key": key, "payload": payload}
+            if machine is not None:
+                rec["machine"] = machine
+            if builder_version is not None:
+                rec["builder_version"] = builder_version
+            with self.path.open("a") as f:
+                f.write(json.dumps(rec, default=list) + "\n")
+        obs_metrics.histogram("store.append_seconds").observe(sp.duration_s)
 
     def __contains__(self, key: str) -> bool:
         return key in self._mem

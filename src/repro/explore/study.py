@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import time
+import json
 from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
@@ -49,6 +49,8 @@ from ..frontend import ir as _ir
 from ..frontend.ir import ir_fingerprint
 from ..frontend.lower import from_kernel_spec, lower_gpu
 from ..frontend.pallas import trace_pallas
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from . import pareto as pareto_mod
 from .prune import PruneReport, prune_configs
 from .registry import KernelEntry, get_estimator, get_kernel, get_machine
@@ -141,7 +143,13 @@ class SweepStats:
     evaluated: int
     cache_hits: int
     pruned: int
+    # defined as the duration of this sweep's "sweep" span, so the stats and an
+    # exported trace agree by construction (spans measure even when disabled)
     wall_s: float
+    # what this sweep contributed to the repro.obs metrics registry
+    # (obs_metrics.diff around the sweep): phase latencies, estimate batch
+    # sizes, cache hit/miss counts, per-rule prune drops — plain JSON
+    metrics: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -183,7 +191,11 @@ class SweepResult:
                 available.update(r.metrics)
             pareto_mod.validate_objectives(objectives, available)
         feasible = self._feasible()
-        idx = pareto_mod.pareto_front([r.metrics for r in feasible], objectives)
+        with obs_trace.span(
+            "sweep.pareto", machine=self.machine, records=len(feasible)
+        ) as sp:
+            idx = pareto_mod.pareto_front([r.metrics for r in feasible], objectives)
+            sp.set(frontier=len(idx))
         return [feasible[i] for i in idx]
 
 
@@ -303,17 +315,35 @@ class _Candidate:
     spec: object | None = None  # GPU KernelSpec, built lazily on demand
 
 
-def _eval_gpu_batch_worker(args) -> list[EstimateRecord]:
+def _eval_gpu_batch_worker(args) -> tuple[list[EstimateRecord], dict]:
     """Process-pool worker: rebuilds everything from picklable (name, configs)
     args; each chunk runs the batched fast path with its own EstimateCache
-    (hoisted invariants are shared within the chunk)."""
-    kernel_name, cfgs, machine, fits, method = args
+    (hoisted invariants are shared within the chunk).
+
+    Returns ``(records, obs payload)``: the worker records spans/metrics into
+    its *own* registries and ships them back for the parent to
+    ``Tracer.absorb`` / ``metrics.merge``, so pool sweeps aggregate like
+    serial ones.  ``traced`` mirrors whether the parent had tracing enabled.
+    """
+    kernel_name, cfgs, machine, fits, method, traced = args
     from ..core.estimator import GPUAnalyticEstimator
 
+    if traced:
+        # fresh tracer even under fork-start (an inherited one would carry the
+        # parent's pid/epoch and re-ship the parent's events)
+        obs_trace.disable()
+        obs_trace.enable()
+    m_before = obs_metrics.snapshot()
     entry = get_kernel(kernel_name)
-    irs = [entry.build_ir(**cfg) for cfg in cfgs]
-    estimator = GPUAnalyticEstimator(method=method, fits=fits)
-    return estimator.estimate_batch(irs, machine, configs=cfgs)
+    with obs_trace.span("worker.chunk", kernel=kernel_name, configs=len(cfgs)):
+        irs = [entry.build_ir(**cfg) for cfg in cfgs]
+        estimator = GPUAnalyticEstimator(method=method, fits=fits)
+        recs = estimator.estimate_batch(irs, machine, configs=cfgs)
+    payload = {
+        "metrics": obs_metrics.diff(m_before, obs_metrics.snapshot()),
+        "trace": obs_trace.export_events() if traced else None,
+    }
+    return recs, payload
 
 
 # --------------------------------------------------------------------------- #
@@ -598,7 +628,125 @@ class Study:
             raise ValueError("cross-machine comparison needs at least two machines")
         return self._ensure().compare()
 
+    def explain(self, config="best", machine: str | None = None):
+        """Provenance report for one configuration: why it scored what it did.
+
+        ``config`` selects the target:
+
+        * ``"best"`` (default) — each machine's top feasible record;
+        * an integer (or digit string) — rank index into the sorted records;
+        * a config dict or its JSON spelling — matched by canonical config
+          key; configs that were *pruned* (so never estimated in the sweep)
+          are estimated on demand from their already-traced IR, which is what
+          makes "why was this one pruned?" answerable.
+
+        Returns an :class:`~repro.obs.explain.ExplainReport` for a
+        single-machine study (or when ``machine=`` narrows it), and a
+        :class:`~repro.obs.explain.CrossMachineExplain` side-by-side across
+        all machines otherwise.  Note ``"best"`` can legitimately pick a
+        *different* config per machine in the cross-machine view — that shift
+        is exactly what the divergence section surfaces.
+        """
+        st = self._ensure()
+        targets = self._machines
+        if machine is not None:
+            want = st.result(machine).machine  # canonicalize + validate
+            targets = [(lb, m) for lb, m in self._machines if m.name == want]
+        reports = {
+            label: self._explain_one(st.results[label], mobj, config)
+            for label, mobj in targets
+        }
+        if len(reports) == 1:
+            return next(iter(reports.values()))
+        from ..obs import explain as explain_mod  # deferred: explain sits above explore
+
+        labels = [label for label, _ in targets]
+        return explain_mod.cross_machine(
+            self.name,
+            self.backend,
+            reports[labels[0]].config,
+            labels,
+            reports,
+        )
+
     # ---- internals -------------------------------------------------------- #
+
+    def _explain_one(self, res: SweepResult, machine, config):
+        from ..obs import explain as explain_mod  # deferred: explain sits above explore
+
+        rec = self._explain_record(res, machine, config)
+        cand = next(
+            (
+                c
+                for c in self._candidates()
+                if c.fp == rec.fingerprint
+                or _cfg_key(retuple(c.config)) == _cfg_key(retuple(rec.config))
+            ),
+            None,
+        )
+        if self.backend == "tpu":
+            if cand is None:
+                raise KeyError(
+                    f"config {rec.config!r} has no traced candidate in this study"
+                )
+            return explain_mod.explain_tpu_record(rec, cand.ir, machine)
+        fits = self.fits if self.fits is not None else machine.fits
+        return explain_mod.explain_gpu_record(
+            rec,
+            machine,
+            fits=fits,
+            spec=self._spec(cand) if cand is not None else None,
+            prune_report=res.prune_report,
+        )
+
+    def _explain_record(self, res: SweepResult, machine, config) -> SweepRecord:
+        """Resolve an ``explain()`` target to a record, estimating on demand
+        for configs the sweep pruned away."""
+        if config is None or config == "best":
+            best = next(iter(res._feasible()), None)
+            if best is None:
+                raise ValueError(
+                    f"no feasible records on {res.machine}; nothing to explain"
+                )
+            return best
+        if isinstance(config, int) or (
+            isinstance(config, str) and config.lstrip("+-").isdigit()
+        ):
+            rank = int(config)
+            if not 0 <= rank < len(res.records):
+                raise IndexError(
+                    f"rank {rank} out of range: {res.machine} has "
+                    f"{len(res.records)} records"
+                )
+            return res.records[rank]
+        if isinstance(config, str):
+            try:
+                config = json.loads(config)
+            except json.JSONDecodeError as e:
+                raise ValueError(
+                    f"--explain target {config!r} is neither 'best', a rank, "
+                    f"nor valid config JSON ({e})"
+                ) from None
+        if not isinstance(config, dict):
+            raise TypeError(f"cannot resolve explain target {config!r}")
+        want = _cfg_key(retuple(dict(config)))
+        for r in res.records:
+            if _cfg_key(retuple(r.config)) == want:
+                return r
+        # not in the sweep's records: pruned (or never enumerated).  The IR
+        # was still traced during candidate enumeration, so estimate it now.
+        for cand in self._candidates():
+            if _cfg_key(retuple(cand.config)) == want:
+                kwargs = {"configs": [cand.config], "cache": self.cache}
+                if self.backend == "gpu":
+                    kwargs["specs"] = [self._spec(cand)]
+                rec = self._estimator.estimate_batch([cand.ir], machine, **kwargs)[0]
+                rec.fingerprint = cand.fp
+                return _as_sweep_record(rec)
+        raise KeyError(
+            f"config {config!r} is not a candidate of this study "
+            f"(kernel {self.name!r}, {len(self._candidates())} candidates)"
+        )
 
     def _ensure(self) -> StudyResult:
         return self._result if self._result is not None else self.run()
@@ -611,56 +759,64 @@ class Study:
             return self._cands
         cands: list[_Candidate] = []
         if self.backend == "tpu":
-            raw = (
-                list(self.configs)
-                if self.configs is not None
-                else self.entry.tpu_configs()
-            )
-            for cfg in raw:
-                # non-affine index_map closures raise NonAffineIndexMapError
-                # here instead of silently aliasing a probe-compatible map
-                ir = trace_pallas(cfg)
-                cands.append(
-                    _Candidate(
-                        config=retuple({"name": cfg.name, **cfg.meta}),
-                        ir=ir,
-                        fp=ir_fingerprint(ir),
-                        raw=cfg,
-                    )
+            with obs_trace.span("study.enumerate", kernel=self.name) as esp:
+                raw = (
+                    list(self.configs)
+                    if self.configs is not None
+                    else self.entry.tpu_configs()
                 )
-        else:
-            if self.configs is None:
-                space = self.space
-                if space is None:
-                    if self.entry is None or self.entry.space is None:
-                        raise ValueError(
-                            f"no search space registered for kernel {self.name!r}"
+                esp.set(configs=len(raw))
+            with obs_trace.span("study.trace_ir", kernel=self.name, configs=len(raw)):
+                for cfg in raw:
+                    # non-affine index_map closures raise NonAffineIndexMapError
+                    # here instead of silently aliasing a probe-compatible map
+                    ir = trace_pallas(cfg)
+                    cands.append(
+                        _Candidate(
+                            config=retuple({"name": cfg.name, **cfg.meta}),
+                            ir=ir,
+                            fp=ir_fingerprint(ir),
+                            raw=cfg,
                         )
-                    space = self.entry.space()
-                self._space_report = FilterReport()
-                raw = space.configs(self._space_report)
-            else:
-                raw = self.configs
-            raw = [dict(c) for c in raw]
-            if self.sample is not None:
-                raw = subsample(raw, self.sample, self.seed)
-            for cfg in raw:
-                if self._build_ir is not None:
-                    ir, spec = self._build_ir(**cfg), None
-                else:
-                    # custom callable: recover the canonical IR from the built
-                    # spec, so lambdas/closures get a stable store identity
-                    spec = self._build(**cfg)
-                    ir = from_kernel_spec(spec)
-                cands.append(
-                    _Candidate(
-                        config=dict(cfg),
-                        ir=ir,
-                        fp=ir_fingerprint(ir),
-                        raw=cfg,
-                        spec=spec,
                     )
-                )
+        else:
+            with obs_trace.span("study.enumerate", kernel=self.name) as esp:
+                if self.configs is None:
+                    space = self.space
+                    if space is None:
+                        if self.entry is None or self.entry.space is None:
+                            raise ValueError(
+                                f"no search space registered for kernel {self.name!r}"
+                            )
+                        space = self.entry.space()
+                    self._space_report = FilterReport()
+                    raw = space.configs(self._space_report)
+                else:
+                    raw = self.configs
+                raw = [dict(c) for c in raw]
+                if self.sample is not None:
+                    raw = subsample(raw, self.sample, self.seed)
+                esp.set(configs=len(raw))
+            with obs_trace.span("study.trace_ir", kernel=self.name, configs=len(raw)):
+                for cfg in raw:
+                    if self._build_ir is not None:
+                        ir, spec = self._build_ir(**cfg), None
+                    else:
+                        # custom callable: recover the canonical IR from the
+                        # built spec, so lambdas/closures get a stable store
+                        # identity
+                        spec = self._build(**cfg)
+                        ir = from_kernel_spec(spec)
+                    cands.append(
+                        _Candidate(
+                            config=dict(cfg),
+                            ir=ir,
+                            fp=ir_fingerprint(ir),
+                            raw=cfg,
+                            spec=spec,
+                        )
+                    )
+        obs_metrics.counter("study.candidates").inc(len(cands))
         self._cands = cands
         return cands
 
@@ -684,101 +840,143 @@ class Study:
         return canonical_key(**parts)
 
     def _run_machine(self, label: str, machine, cands: list[_Candidate]) -> SweepResult:
-        t0 = time.perf_counter()
         store = self._stores.get(label)
         n_candidates = len(cands)
+        m_before = obs_metrics.snapshot()
 
-        kept = list(range(n_candidates))
-        prune_report: PruneReport | None = None
-        if self.prune:  # GPU-only (validated at construction)
-            specs = [self._spec(c) for c in cands]
-            _, prune_report = prune_configs(
-                self._build,
-                [c.raw for c in cands],
-                machine,
-                keep_fraction=self.keep_fraction,
-                specs=specs,
-                cache=self.cache,
-            )
-            kept = prune_report.kept_indices or []
-
-        fits_tag = None
-        if self.backend == "gpu":
-            fits = self.fits if self.fits is not None else machine.fits
-            fits_tag = _fits_tag(fits)
-        else:
-            fits = None
-        machine_tag = _machine_tag(machine)
-
-        records: list[SweepRecord | None] = [None] * len(kept)
-        misses: list[tuple[int, int, str | None]] = []  # (slot, cand idx, key)
-        cache_hits = 0
-        for j, ci in enumerate(kept):
-            cand = cands[ci]
-            key = self._key(cand, machine, machine_tag, fits_tag) if store is not None else None
-            payload = store.get(key) if store is not None else None
-            if payload is not None:
-                rec = record_from_payload(payload, fingerprint=cand.fp)
-                records[j] = _as_sweep_record(rec, from_cache=True)
-                cache_hits += 1
-            else:
-                misses.append((j, ci, key))
-
-        def commit(j: int, key: str | None, rec: EstimateRecord, fp: str) -> None:
-            """Record + persist one result as soon as it lands, so an
-            interrupted study keeps everything estimated so far."""
-            rec.fingerprint = fp
-            records[j] = _as_sweep_record(rec)
-            if store is not None:
-                store.put(
-                    key,
-                    record_payload(rec),
-                    machine=machine.name,
-                    builder_version=_ir.BUILDER_VERSION,
-                )
-
-        use_pool = (
-            self.workers > 0
-            and self.backend == "gpu"
-            and self.entry is not None
-            and len(misses) > 1
-        )
-        if use_pool:
-            # chunk so each worker message amortizes the batch path's hoisting
-            per_worker = -(-len(misses) // self.workers)
-            size = max(1, min(_BATCH_CHUNK, per_worker))
-            chunks = [misses[i : i + size] for i in range(0, len(misses), size)]
-            args = [
-                (self.name, [cands[ci].raw for _, ci, _ in ch], machine, fits, self.method)
-                for ch in chunks
-            ]
-            with ProcessPoolExecutor(max_workers=self.workers) as pool:
-                for ch, recs in zip(chunks, pool.map(_eval_gpu_batch_worker, args)):
-                    for (j, ci, key), rec in zip(ch, recs):
-                        commit(j, key, rec, cands[ci].fp)
-        else:
-            for start in range(0, len(misses), _BATCH_CHUNK):
-                chunk = misses[start : start + _BATCH_CHUNK]
-                irs = [cands[ci].ir for _, ci, _ in chunk]
-                cfgs = [cands[ci].config for _, ci, _ in chunk]
-                if self.backend == "gpu":
-                    recs = self._estimator.estimate_batch(
-                        irs,
+        # the sweep's wall clock IS this span's duration — SweepStats.wall_s
+        # and an exported trace can never disagree (spans measure duration
+        # even when tracing is disabled)
+        with obs_trace.span(
+            "sweep", kernel=self.name, machine=machine.name, backend=self.backend
+        ) as sweep_span:
+            kept = list(range(n_candidates))
+            prune_report: PruneReport | None = None
+            if self.prune:  # GPU-only (validated at construction)
+                with obs_trace.span(
+                    "sweep.prune", machine=machine.name, configs=n_candidates
+                ) as psp:
+                    specs = [self._spec(c) for c in cands]
+                    _, prune_report = prune_configs(
+                        self._build,
+                        [c.raw for c in cands],
                         machine,
-                        configs=cfgs,
+                        keep_fraction=self.keep_fraction,
+                        specs=specs,
                         cache=self.cache,
-                        # lowered once per config, shared by every machine
-                        specs=[self._spec(cands[ci]) for _, ci, _ in chunk],
                     )
-                else:
-                    recs = self._estimator.estimate_batch(
-                        irs, machine, configs=cfgs, cache=self.cache
-                    )
-                for (j, ci, key), rec in zip(chunk, recs):
-                    commit(j, key, rec, cands[ci].fp)
+                    kept = prune_report.kept_indices or []
+                    psp.set(kept=len(kept), dropped=prune_report.dropped)
 
-        done = [r for r in records if r is not None]
-        sort_records(done, self.backend)
+            fits_tag = None
+            if self.backend == "gpu":
+                fits = self.fits if self.fits is not None else machine.fits
+                fits_tag = _fits_tag(fits)
+            else:
+                fits = None
+            machine_tag = _machine_tag(machine)
+
+            records: list[SweepRecord | None] = [None] * len(kept)
+            misses: list[tuple[int, int, str | None]] = []  # (slot, cand idx, key)
+            cache_hits = 0
+            with obs_trace.span(
+                "sweep.store_lookup", machine=machine.name, configs=len(kept)
+            ) as lsp:
+                for j, ci in enumerate(kept):
+                    cand = cands[ci]
+                    key = (
+                        self._key(cand, machine, machine_tag, fits_tag)
+                        if store is not None
+                        else None
+                    )
+                    payload = store.get(key) if store is not None else None
+                    if payload is not None:
+                        rec = record_from_payload(payload, fingerprint=cand.fp)
+                        records[j] = _as_sweep_record(rec, from_cache=True)
+                        cache_hits += 1
+                    else:
+                        misses.append((j, ci, key))
+                lsp.set(hits=cache_hits, misses=len(misses))
+
+            def commit(j: int, key: str | None, rec: EstimateRecord, fp: str) -> None:
+                """Record + persist one result as soon as it lands, so an
+                interrupted study keeps everything estimated so far."""
+                rec.fingerprint = fp
+                records[j] = _as_sweep_record(rec)
+                if store is not None:
+                    store.put(
+                        key,
+                        record_payload(rec),
+                        machine=machine.name,
+                        builder_version=_ir.BUILDER_VERSION,
+                    )
+
+            use_pool = (
+                self.workers > 0
+                and self.backend == "gpu"
+                and self.entry is not None
+                and len(misses) > 1
+            )
+            if use_pool:
+                # chunk so each worker message amortizes the batch path's hoisting
+                per_worker = -(-len(misses) // self.workers)
+                size = max(1, min(_BATCH_CHUNK, per_worker))
+                chunks = [misses[i : i + size] for i in range(0, len(misses), size)]
+                traced = obs_trace.active() is not None
+                args = [
+                    (
+                        self.name,
+                        [cands[ci].raw for _, ci, _ in ch],
+                        machine,
+                        fits,
+                        self.method,
+                        traced,
+                    )
+                    for ch in chunks
+                ]
+                with obs_trace.span(
+                    "sweep.estimate_pool",
+                    machine=machine.name,
+                    workers=self.workers,
+                    chunks=len(chunks),
+                ), ProcessPoolExecutor(max_workers=self.workers) as pool:
+                    for ch, (recs, obs_payload) in zip(
+                        chunks, pool.map(_eval_gpu_batch_worker, args)
+                    ):
+                        for (j, ci, key), rec in zip(ch, recs):
+                            commit(j, key, rec, cands[ci].fp)
+                        obs_metrics.merge(obs_payload["metrics"])
+                        tracer = obs_trace.active()
+                        if tracer is not None and obs_payload["trace"] is not None:
+                            tracer.absorb(obs_payload["trace"])
+            else:
+                for start in range(0, len(misses), _BATCH_CHUNK):
+                    chunk = misses[start : start + _BATCH_CHUNK]
+                    irs = [cands[ci].ir for _, ci, _ in chunk]
+                    cfgs = [cands[ci].config for _, ci, _ in chunk]
+                    if self.backend == "gpu":
+                        recs = self._estimator.estimate_batch(
+                            irs,
+                            machine,
+                            configs=cfgs,
+                            cache=self.cache,
+                            # lowered once per config, shared by every machine
+                            specs=[self._spec(cands[ci]) for _, ci, _ in chunk],
+                        )
+                    else:
+                        recs = self._estimator.estimate_batch(
+                            irs, machine, configs=cfgs, cache=self.cache
+                        )
+                    for (j, ci, key), rec in zip(chunk, recs):
+                        commit(j, key, rec, cands[ci].fp)
+
+            done = [r for r in records if r is not None]
+            with obs_trace.span("sweep.sort", machine=machine.name, records=len(done)):
+                sort_records(done, self.backend)
+            obs_metrics.counter("sweep.cache_hits").inc(cache_hits)
+            obs_metrics.counter("sweep.cache_misses").inc(len(misses))
+            if prune_report is not None:
+                obs_metrics.counter("sweep.pruned").inc(prune_report.dropped)
         return SweepResult(
             kernel=self.name,
             backend=self.backend,
@@ -790,7 +988,8 @@ class Study:
                 evaluated=len(misses),
                 cache_hits=cache_hits,
                 pruned=prune_report.dropped if prune_report else 0,
-                wall_s=time.perf_counter() - t0,
+                wall_s=sweep_span.duration_s,
+                metrics=obs_metrics.diff(m_before, obs_metrics.snapshot()),
             ),
             prune_report=prune_report,
             space_report=self._space_report,

@@ -20,6 +20,7 @@ coefficient (their step is unobservable and irrelevant).
 """
 from __future__ import annotations
 
+from ..obs import metrics as obs_metrics
 from .ir import AccessIR, IRAccess, IRField
 
 
@@ -28,6 +29,7 @@ class NonAffineIndexMapError(ValueError):
 
 
 def _probe(index_map, point, where: str) -> tuple[int, ...]:
+    obs_metrics.counter("pallas.probes").inc()
     try:
         out = index_map(*point)
     except Exception as e:  # pragma: no cover - defensive
@@ -117,6 +119,7 @@ def trace_pallas(cfg) -> AccessIR:
     fields: list[IRField] = []
     accesses: list[IRAccess] = []
     seen: set[str] = set()
+    probes_before = obs_metrics.counter("pallas.probes").value
     for acc in cfg.accesses:
         if acc.name in seen:
             raise ValueError(
@@ -146,6 +149,9 @@ def trace_pallas(cfg) -> AccessIR:
                 is_store=acc.is_output,
             )
         )
+    obs_metrics.histogram("pallas.probes_per_trace").observe(
+        obs_metrics.counter("pallas.probes").value - probes_before
+    )
     return AccessIR(
         name=cfg.name,
         fields=tuple(fields),

@@ -1,0 +1,19 @@
+"""`repro.obs` — observability for the estimation stack.
+
+Three pillars (see ISSUE 6 / the README "Observability" section):
+
+* :mod:`repro.obs.trace` — nestable spans, Chrome-trace/Perfetto export,
+  cross-process aggregation for pool workers;
+* :mod:`repro.obs.metrics` — process-global counters/gauges/histograms,
+  JSON snapshots, per-sweep diffs;
+* :mod:`repro.obs.explain` — per-config estimate provenance (limiter
+  attribution, per-level volumes vs. capacity fits, prune verdicts).
+
+``trace`` and ``metrics`` are stdlib-only and importable from every layer.
+``explain`` sits *above* ``repro.core``/``repro.explore`` and is therefore not
+imported eagerly here — import it explicitly (``from repro.obs import
+explain``) or go through ``Study.explain``.
+"""
+from . import metrics, trace
+
+__all__ = ["metrics", "trace"]

@@ -1,0 +1,239 @@
+"""Process-global metrics registry (`repro.obs` pillar 2).
+
+Counters, gauges and histograms for the estimation stack: store cache
+hits/misses, configs pruned per rule, ``estimate_many`` batch sizes and
+per-batch latency, Pallas probe counts per kernel trace, store load/append
+latency, deprecation-shim call counts.  Everything is a plain in-process
+object — no exporter, no sampling thread, no dependencies — cheap enough to
+stay always-on (instrumentation sits at phase/batch granularity, never inside
+the per-config hot loop).
+
+Snapshots are plain JSON-able dicts::
+
+    from repro.obs import metrics
+
+    metrics.counter("store.hits").inc()
+    metrics.counter("prune.dropped", rule="sanity").inc(3)
+    metrics.histogram("estimate.batch_seconds").observe(0.21)
+
+    snap = metrics.snapshot()          # JSON-able
+    delta = metrics.diff(before, snap) # what one sweep contributed
+
+``SweepStats.metrics`` carries the per-sweep :func:`diff`; pool workers ship
+their registry snapshot back with their results and the parent :func:`merge`\\ s
+it, so process-pool sweeps aggregate correctly.
+
+Labels are plain keyword arguments; a labelled instrument renders as
+``name{k=v,...}`` in the snapshot, one series per label combination.
+"""
+from __future__ import annotations
+
+import math
+import threading
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "counter",
+    "diff",
+    "gauge",
+    "histogram",
+    "merge",
+    "registry",
+    "reset",
+    "snapshot",
+]
+
+
+class Counter:
+    """Monotonically increasing count."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-written value (e.g. current cache size)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Streaming summary: count / sum / min / max (JSON-able, mergeable).
+
+    Deliberately bucket-free: the consumers here (phase attribution, perf
+    trajectories in ``BENCH_*.json``) want means and extremes, and a fixed
+    bucket layout would just be one more schema to version.
+    """
+
+    __slots__ = ("count", "total", "min", "max")
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def as_dict(self) -> dict:
+        if not self.count:
+            return {"count": 0, "sum": 0.0, "min": None, "max": None, "mean": 0.0}
+        return {
+            "count": self.count,
+            "sum": self.total,
+            "min": self.min,
+            "max": self.max,
+            "mean": self.mean,
+        }
+
+
+def _series_key(name: str, labels: dict) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class MetricsRegistry:
+    """One process's metric series, keyed ``name{label=value,...}``."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    def _get(self, table: dict, cls, name: str, labels: dict):
+        key = _series_key(name, labels)
+        inst = table.get(key)
+        if inst is None:
+            with self._lock:
+                inst = table.setdefault(key, cls())
+        return inst
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(self._counters, Counter, name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(self._gauges, Gauge, name, labels)
+
+    def histogram(self, name: str, **labels) -> Histogram:
+        return self._get(self._histograms, Histogram, name, labels)
+
+    def snapshot(self) -> dict:
+        """JSON-able view of every series (round-trips through json exactly:
+        values are floats/ints/None only)."""
+        with self._lock:
+            return {
+                "counters": {k: c.value for k, c in self._counters.items()},
+                "gauges": {k: g.value for k, g in self._gauges.items()},
+                "histograms": {
+                    k: h.as_dict() for k, h in self._histograms.items()
+                },
+            }
+
+    def merge(self, snap: dict) -> None:
+        """Fold another process's snapshot into this registry (counters add,
+        histograms combine, gauges last-write-wins)."""
+        for k, v in snap.get("counters", {}).items():
+            self._get(self._counters, Counter, k, {}).inc(v)
+        for k, v in snap.get("gauges", {}).items():
+            self._get(self._gauges, Gauge, k, {}).set(v)
+        for k, d in snap.get("histograms", {}).items():
+            h = self._get(self._histograms, Histogram, k, {})
+            if d.get("count"):
+                h.count += d["count"]
+                h.total += d["sum"]
+                if d["min"] is not None and d["min"] < h.min:
+                    h.min = d["min"]
+                if d["max"] is not None and d["max"] > h.max:
+                    h.max = d["max"]
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._histograms.clear()
+
+
+def diff(before: dict, after: dict) -> dict:
+    """What happened *between* two snapshots: counter deltas (zero-delta series
+    dropped), gauges as-of ``after``, histogram count/sum deltas (min/max are
+    not invertible, so the delta reports ``after``'s extremes)."""
+    out = {"counters": {}, "gauges": dict(after.get("gauges", {})), "histograms": {}}
+    b_c = before.get("counters", {})
+    for k, v in after.get("counters", {}).items():
+        d = v - b_c.get(k, 0.0)
+        if d:
+            out["counters"][k] = d
+    b_h = before.get("histograms", {})
+    for k, h in after.get("histograms", {}).items():
+        prev = b_h.get(k, {"count": 0, "sum": 0.0})
+        dc = h["count"] - prev.get("count", 0)
+        if dc:
+            out["histograms"][k] = {
+                "count": dc,
+                "sum": h["sum"] - prev.get("sum", 0.0),
+                "min": h["min"],
+                "max": h["max"],
+                "mean": (h["sum"] - prev.get("sum", 0.0)) / dc,
+            }
+    return out
+
+
+# process-global registry + module-level conveniences (the instrumented call
+# sites all go through these)
+_REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    return _REGISTRY
+
+
+def counter(name: str, **labels) -> Counter:
+    return _REGISTRY.counter(name, **labels)
+
+
+def gauge(name: str, **labels) -> Gauge:
+    return _REGISTRY.gauge(name, **labels)
+
+
+def histogram(name: str, **labels) -> Histogram:
+    return _REGISTRY.histogram(name, **labels)
+
+
+def snapshot() -> dict:
+    return _REGISTRY.snapshot()
+
+
+def merge(snap: dict) -> None:
+    _REGISTRY.merge(snap)
+
+
+def reset() -> None:
+    _REGISTRY.reset()
