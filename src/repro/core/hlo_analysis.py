@@ -107,6 +107,17 @@ def _group_size(line: str, default: int) -> int:
     return default
 
 
+def collective_wire_bytes(kind: str, result_bytes: float, n: int) -> float:
+    """Ring-algorithm bytes moved per device for one collective.
+
+    Public: the whole-model replay (`repro.graph`) prices its communication
+    edges with the same ring model this module applies to dry-run HLO, so an
+    analytically traced step and a compiled one agree on wire volumes.
+    ``result_bytes`` is the op's *result* buffer per device (gathered buffer
+    for all-gather, scattered shard for reduce-scatter)."""
+    return _wire_bytes(kind, result_bytes, n)
+
+
 def _wire_bytes(kind: str, result_bytes: float, n: int) -> float:
     """Ring-algorithm bytes moved per device."""
     if n <= 1:

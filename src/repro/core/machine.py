@@ -56,6 +56,11 @@ class GPUMachine:
     max_threads_per_block: int = 1024
     warp_threads: int = 32
     regs_per_sm: int = 65536  # 32-bit registers
+    # interconnect (whole-model replay: collective edges on a GPU mesh) —
+    # per-GPU NVLink aggregate per direction, and the per-GPU share of the
+    # node's NICs for mesh axes that cross node boundaries
+    bw_link: float = 150e9  # B/s (V100: 6 NVLink2 x 25 GB/s per direction)
+    bw_inter_node: float = 25e9  # B/s per GPU (e.g. 200 Gb/s IB per pair of GPUs)
     # per-architecture capacity-miss calibration (paper §III.E sigmoids); the
     # V100 values transfer as the initial calibration for newer parts and can
     # be re-fit per machine via capacity.fit_sigmoid + core/exactcount.py
@@ -95,6 +100,7 @@ A100_40GB = GPUMachine(
     bw_l2=4500e9,
     peak_fp64=9.746e12,  # 108 SM * 32 FP64 lanes * 2 flop * 1.41 GHz
     peak_fp32=19.49e12,  # 108 SM * 64 FP32 lanes * 2 flop * 1.41 GHz
+    bw_link=300e9,  # 12 NVLink3 x 25 GB/s per direction
     fits=A100_FITS,
 )
 
@@ -111,6 +117,8 @@ H100_SXM = GPUMachine(
     bw_l2=5500e9,
     peak_fp64=33.45e12,  # 132 SM * 64 FP64 lanes * 2 flop * 1.98 GHz
     peak_fp32=66.9e12,  # 132 SM * 128 FP32 lanes * 2 flop * 1.98 GHz
+    bw_link=450e9,  # 18 NVLink4 x 25 GB/s per direction
+    bw_inter_node=50e9,  # 400 Gb/s NIC per GPU (SXM reference system)
     fits=H100_FITS,
 )
 
@@ -234,10 +242,20 @@ class MeshSpec:
         Intra-pod axes ride the 2D torus (2 links per axis direction pair);
         the pod axis crosses the data-center network.
         """
+        return self.bandwidth(name, tpu)
+
+    def bandwidth(self, name: str, machine) -> float:
+        """Per-device collective bandwidth on one mesh axis, for either
+        machine family: TPU axes ride the ICI torus / DCN, GPU axes ride
+        NVLink within a node and the NIC across nodes (the whole-model
+        replay's link-bandwidth model for communication edges)."""
         if name in self.inter_pod_axes:
-            return tpu.bw_inter_pod
-        return 2 * tpu.bw_ici_link  # bidirectional ring on one torus dimension
+            return getattr(machine, "bw_inter_pod", None) or machine.bw_inter_node
+        if isinstance(machine, TPUMachine):
+            return 2 * machine.bw_ici_link  # bidirectional ring on one torus dim
+        return machine.bw_link
 
 
+SINGLE_DEVICE_MESH = MeshSpec(axes=(("data", 1), ("model", 1)))
 SINGLE_POD_MESH = MeshSpec(axes=(("data", 16), ("model", 16)))
 MULTI_POD_MESH = MeshSpec(axes=(("pod", 2), ("data", 16), ("model", 16)))

@@ -628,6 +628,33 @@ class Study:
             raise ValueError("cross-machine comparison needs at least two machines")
         return self._ensure().compare()
 
+    @staticmethod
+    def step_time(
+        model,
+        machine,
+        *,
+        mesh=None,
+        batch: int = 8,
+        seq: int = 512,
+        kind: str = "forward",
+        method: str = "sym",
+        fits: CapacityFits | None = None,
+        cache: EstimateCache | None = None,
+    ):
+        """Whole-model prediction: trace one model step into a kernel DAG,
+        estimate every unique kernel through this same estimator protocol,
+        and replay it into an end-to-end step time.
+
+        Returns a :class:`repro.graph.StepTimeReport`; see
+        :func:`repro.graph.step_time` (this is the same call, surfaced here
+        so model-level and kernel-level questions share one facade)."""
+        from ..graph import step_time as _graph_step_time
+
+        return _graph_step_time(
+            model, machine, mesh=mesh, batch=batch, seq=seq, kind=kind,
+            method=method, fits=fits, cache=cache,
+        )
+
     def explain(self, config="best", machine: str | None = None):
         """Provenance report for one configuration: why it scored what it did.
 

@@ -33,3 +33,43 @@ def make_test_mesh(data: int = 1, model: int = 1):
 
     devices = jax.devices()[: data * model]
     return jax.sharding.Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))
+
+
+def mesh_spec(mesh=None):
+    """Normalize any mesh spelling to the jax-free :class:`~repro.core.machine.MeshSpec`.
+
+    Accepted: ``None`` (single device), a :class:`MeshSpec` (returned as-is),
+    a jax ``Mesh``/``AbstractMesh`` (anything with a ``.shape`` name->size
+    mapping), a ``{"data": 2, "model": 2}`` dict, an ``(("data", 2), ...)``
+    axis tuple, or a ``"data=2,model=2"`` string (the CLI spelling).  This is
+    how the graph tracer reads the sharding geometry out of `launch/mesh.py`
+    meshes without importing jax device state.
+    """
+    from ..core.machine import SINGLE_DEVICE_MESH, MeshSpec
+
+    if mesh is None:
+        return SINGLE_DEVICE_MESH
+    if isinstance(mesh, MeshSpec):
+        return mesh
+    if isinstance(mesh, str):
+        axes = []
+        for part in mesh.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            name, _, size = part.partition("=")
+            if not size:
+                raise ValueError(
+                    f"mesh axis {part!r} is not name=size (e.g. 'data=2,model=2')"
+                )
+            axes.append((name.strip(), int(size)))
+        return MeshSpec(axes=tuple(axes))
+    if isinstance(mesh, dict):
+        return MeshSpec(axes=tuple((str(k), int(v)) for k, v in mesh.items()))
+    shape = getattr(mesh, "shape", None)
+    if hasattr(shape, "items"):  # jax Mesh / AbstractMesh: OrderedDict name->size
+        return MeshSpec(axes=tuple((str(k), int(v)) for k, v in shape.items()))
+    try:  # (("data", 2), ("model", 2)) axis tuples
+        return MeshSpec(axes=tuple((str(a), int(s)) for a, s in mesh))
+    except (TypeError, ValueError):
+        raise TypeError(f"cannot interpret {mesh!r} as a device mesh") from None

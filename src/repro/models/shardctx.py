@@ -35,7 +35,13 @@ def sharding_ctx(rules: ShardingRules, axis_sizes: dict[str, int]):
         _CTX.reset(token)
 
 
-def _axes_size(axes, sizes: dict[str, int]) -> int:
+def axes_size(axes, sizes: dict[str, int]) -> int:
+    """Product of the mesh-axis sizes a logical axis entry maps onto.
+
+    Public: the graph tracer (`repro.graph.frontend`) uses the same
+    translation as `constrain` so its analytic sharding (local dims, comm
+    volumes) matches what GSPMD would actually do to the traced step.
+    """
     if axes is None:
         return 1
     if isinstance(axes, str):
@@ -44,6 +50,9 @@ def _axes_size(axes, sizes: dict[str, int]) -> int:
     for a in axes:
         n *= sizes.get(a, 1)
     return n
+
+
+_axes_size = axes_size  # original (private) spelling
 
 
 def constrain(x, logical: tuple):

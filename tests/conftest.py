@@ -1,0 +1,9 @@
+"""Test-session bootstrap: give the CPU backend enough virtual devices that
+sharded-step tests (trainer on a data=2 mesh, graph-vs-GSPMD round-trips) can
+build real multi-device meshes.  XLA reads the flag at first jax import, so it
+must be set here — conftest runs before any test module imports jax."""
+import os
+import sys
+
+if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

@@ -1,0 +1,66 @@
+"""Golden whole-model step-time reports.
+
+Each golden file is the exact rendered report of one deterministic
+``python -m repro.explore graph`` invocation — node count, critical path,
+limiter attribution, overlap fraction, the predicted step time itself.  Any
+change to the tracer's kernel decomposition, the sharding rules, the
+per-kernel estimators, the ring collective model, or the replay scheduler
+shows up as a diff here.
+
+Regenerating after an INTENDED model change::
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden_graph.py
+
+then inspect and commit the rewritten files under ``tests/golden/``.
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.explore import cli
+
+pytestmark = pytest.mark.slow  # golden suites run in the slow regression lane
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+REGEN = os.environ.get("REPRO_REGEN_GOLDEN") == "1"
+
+CASES = {
+    # GPU: rwkv6 forward step on a 2x2 A100 mesh
+    "graph_rwkv6_a100.txt": [
+        "graph", "--model", "rwkv6-1.6b", "--smoke", "--machine", "a100",
+        "--mesh", "data=2,model=2", "--batch", "8", "--seq", "128",
+    ],
+    # TPU: zamba2 (hybrid mamba2 + shared attention) TRAIN step on a v5e pod slice
+    "graph_zamba2_tpuv5e.txt": [
+        "graph", "--model", "zamba2-7b", "--smoke", "--machine", "tpuv5e",
+        "--mesh", "data=4,model=2", "--batch", "8", "--seq", "128",
+        "--kind", "train",
+    ],
+}
+
+
+def _run_cli(args: list[str], capsys) -> str:
+    rc = cli.main(args)
+    captured = capsys.readouterr()
+    assert rc == 0, captured.err
+    return captured.out
+
+
+@pytest.mark.parametrize("golden_name", sorted(CASES))
+def test_graph_report_matches_golden(golden_name, capsys):
+    out = _run_cli(CASES[golden_name], capsys)
+    path = GOLDEN_DIR / golden_name
+    if REGEN:
+        path.write_text(out)
+        pytest.skip(f"regenerated {golden_name}")
+    assert path.exists(), (
+        f"golden file {golden_name} missing; regenerate with "
+        "REPRO_REGEN_GOLDEN=1"
+    )
+    assert out == path.read_text(), (
+        f"{golden_name} drifted — if the change is intended, regenerate with "
+        "REPRO_REGEN_GOLDEN=1 and commit the diff"
+    )

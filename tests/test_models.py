@@ -102,3 +102,28 @@ def test_moe_capacity_drops_tokens():
     logits, aux = model.forward(params, tokens)
     assert np.isfinite(np.asarray(logits)).all()
     assert float(aux) > 0.0  # load-balance loss reported
+
+
+def test_shardctx_axes_size_roundtrip_with_graph_tracer():
+    """`axes_size` is the one logical->physical translation shared by
+    `constrain()` and the graph tracer; the tracer's local matmul dims must
+    equal the divisibility-gated dims it implies, per family."""
+    from repro.graph import rules_for_spec, trace_step
+    from repro.launch.mesh import mesh_spec
+    from repro.models.shardctx import _axes_size, axes_size
+
+    mesh = mesh_spec("data=2,model=2")
+    sizes = dict(mesh.axes)
+    rules = rules_for_spec(mesh)
+    assert _axes_size is axes_size  # back-compat alias for the old spelling
+    assert axes_size(rules.tp, sizes) == 2
+    assert axes_size(rules.fsdp, sizes) == 2
+    assert axes_size(None, sizes) == 1
+    assert axes_size(("data", "model"), sizes) == 4
+    for arch_id in ("olmo-1b", "rwkv6-1.6b", "zamba2-7b", "dbrx-132b"):
+        cfg = get_arch(arch_id).smoke()
+        dag = trace_step(cfg, batch=8, seq=64, mesh=mesh, backend="gpu")
+        head = next(n for nid, n in dag.nodes.items() if nid.endswith(".head"))
+        tp = axes_size(rules.tp, sizes)
+        want_v = cfg.vocab // tp if cfg.vocab % tp == 0 else cfg.vocab
+        assert head.meta["dims"] == (8 * 64 // 2, want_v, cfg.d_model)
