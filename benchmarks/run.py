@@ -32,6 +32,24 @@ def _timed(fn, *args, repeat=1, **kw):
     return us, out
 
 
+def _update_bench(update: dict, path: str = "BENCH_sweep.json") -> dict:
+    """Merge ``update`` into the benchmark artifact instead of clobbering it,
+    so ``sweep_throughput`` and ``service_throughput`` each own their keys and
+    running one never erases the other's trajectory."""
+    doc = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            doc = {}
+    doc.update(update)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return doc
+
+
 # --------------------------------------------------------------------------- #
 
 
@@ -340,9 +358,7 @@ def sweep_throughput():
             "span_seconds": {k: round(v, 6) for k, v in sorted(span_s.items())},
         },
     }
-    with open("BENCH_sweep.json", "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
+    _update_bench(payload)
     derived = (
         f"base={payload['baseline_cfg_per_s']:.0f}cfg/s "
         f"cold={payload['cold_cfg_per_s']:.0f}cfg/s "
@@ -351,6 +367,114 @@ def sweep_throughput():
         f"store_load={n_lines}ln {payload['store_load_speedup']:.1f}x"
     )
     return "sweep_throughput", t_cold * 1e6, derived
+
+
+def service_throughput():
+    """Estimation-service throughput -> the ``service`` entry of
+    BENCH_sweep.json (merged alongside ``sweep_throughput``'s keys).
+
+    Four numbers over the full stencil25 space through a real loopback
+    daemon (HTTP, keep-alive, one ``ServeClient`` per logical client):
+
+      * warm_queries_per_s   — fully-warm configs served per second in
+        realistic request batches of 8 (alias -> store key -> payload, zero
+        tracing); the service acceptance floor is >= 1000,
+      * warm_requests_per_s  — worst case: one config per HTTP round trip,
+      * alias_warm_speedup   — a warm aliased `Study` vs the same warm study
+        re-tracing every config to derive its store key,
+      * batch_occupancy      — mean cold-miss batch fill when four concurrent
+        clients miss at once (the daemon's cross-client linger window).
+    """
+    import tempfile
+    import threading
+
+    from repro.core import appspec
+    from repro.explore import Study
+    from repro.explore.serve import ServeClient, serve
+
+    kernel = "stencil25"
+    cfgs = appspec.stencil_config_space()
+    with tempfile.TemporaryDirectory() as d:
+        server, service = serve(port=0, root=d)
+        thread = threading.Thread(target=server.serve_forever, daemon=True)
+        thread.start()
+        port = server.server_address[1]
+        client = ServeClient(port=port)
+        try:
+            t0 = time.perf_counter()
+            client.estimate(kernel, cfgs, machine="v100")
+            t_cold = time.perf_counter() - t0
+
+            # warm: realistic batches of 8 configs per request
+            batches = [cfgs[i : i + 8] for i in range(0, len(cfgs), 8)]
+            t0 = time.perf_counter()
+            for b in batches:
+                client.estimate(kernel, b, machine="v100")
+            t_warm = time.perf_counter() - t0
+            warm_queries_per_s = len(cfgs) / t_warm
+
+            # warm worst case: one config per HTTP round trip
+            t0 = time.perf_counter()
+            for c in cfgs:
+                client.estimate(kernel, [c], machine="v100")
+            t_single = time.perf_counter() - t0
+            warm_requests_per_s = len(cfgs) / t_single
+
+            # cold-miss batching across clients: four concurrent clients miss
+            # on a second machine; the linger window should co-batch them
+            chunks = [cfgs[i::4] for i in range(4)]
+
+            def cold_client(chunk):
+                c = ServeClient(port=port)
+                c.estimate(kernel, chunk, machine="a100")
+                c.close()
+
+            threads = [
+                threading.Thread(target=cold_client, args=(ch,)) for ch in chunks
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            serve_m = service.metrics()["serve"]
+        finally:
+            client.close()
+            server.shutdown()
+            server.server_close()
+            service.close()
+            thread.join(timeout=10)
+
+        # alias warm speedup vs re-traced keys (same records either way)
+        store = os.path.join(d, "alias_bench.jsonl")
+        alias = os.path.join(d, "alias_bench.alias.jsonl")
+        Study(kernel, store=store, alias=alias).run()  # populate store + alias
+        us_retrace, _ = _timed(lambda: Study(kernel, store=store).result())
+        us_alias, _ = _timed(
+            lambda: Study(kernel, store=store, alias=alias).result()
+        )
+
+    payload = {
+        "service": {
+            "kernel": kernel,
+            "configs": len(cfgs),
+            "cold_s": round(t_cold, 6),
+            "warm_queries_per_s": round(warm_queries_per_s, 1),
+            "warm_requests_per_s": round(warm_requests_per_s, 1),
+            "alias_warm_speedup": round(us_retrace / max(us_alias, 1.0), 2),
+            "batch_occupancy": serve_m["batch_occupancy"],
+            "cold_batches": serve_m["cold_batches"],
+            "alias_hit_rate": serve_m["alias_hit_rate"],
+        }
+    }
+    _update_bench(payload)
+    s = payload["service"]
+    derived = (
+        f"warm={s['warm_queries_per_s']:.0f}q/s "
+        f"single={s['warm_requests_per_s']:.0f}req/s "
+        f"alias_speedup={s['alias_warm_speedup']:.1f}x "
+        f"occupancy={s['batch_occupancy'] if s['batch_occupancy'] is None else round(s['batch_occupancy'], 3)}"
+    )
+    return "service_throughput", t_warm * 1e6, derived
 
 
 def crossmachine_ranking_shift():
@@ -447,6 +571,7 @@ BENCHES = [
     tpu_wkv_ranking,
     explore_cached_sweep,
     sweep_throughput,
+    service_throughput,
     crossmachine_ranking_shift,
     study_multimachine_sharing,
     dryrun_roofline_summary,

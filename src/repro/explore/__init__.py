@@ -9,12 +9,15 @@ is the search layer that makes that fast at scale, behind ONE user-facing API:
   :class:`~repro.core.record.Estimator` protocol,
 * :mod:`repro.explore.space`    — declarative search-space DSL (axes + constraints),
 * :mod:`repro.explore.prune`    — cheap roofline/occupancy pre-filters,
-* :mod:`repro.explore.store`    — persistent, resumable JSONL result store,
+* :mod:`repro.store`            — pluggable persistent result stores (single
+  file, sharded multi-writer, config→fingerprint alias layer); re-exported
+  here and from :mod:`repro.explore.store` for compatibility,
 * :mod:`repro.explore.pareto`   — Pareto frontier + top-k selection,
 * :mod:`repro.explore.registry` — kernel / machine / estimator registries,
-* :mod:`repro.explore.cli`      — ``python -m repro.explore --kernel stencil25 --top 5``,
-* :mod:`repro.explore.engine` / :mod:`repro.explore.crossmachine` — deprecated
-  ``sweep()`` / ``compare()`` shims over :class:`Study`.
+* :mod:`repro.explore.serve`    — the estimation service daemon
+  (``python -m repro.explore serve``): warm in-memory cache + store, HTTP
+  queries, cold misses batched across clients,
+* :mod:`repro.explore.cli`      — ``python -m repro.explore --kernel stencil25 --top 5``.
 
 Quickstart::
 
@@ -27,8 +30,6 @@ Quickstart::
     multi = Study("attention", backend="tpu", machines=["tpuv5e", "tpuv6e"])
     shift = multi.compare()        # Kendall tau + winner placements
 """
-from .crossmachine import compare, default_stores
-from .engine import sweep
 from .pareto import (
     GPU_OBJECTIVES,
     TPU_OBJECTIVES,
@@ -60,7 +61,13 @@ from .space import (
     pow2,
     predicate,
 )
-from .store import ResultStore, canonical_key
+from .store import (
+    AliasStore,
+    ResultStore,
+    ShardedStore,
+    canonical_key,
+    open_store,
+)
 from .study import (
     CrossMachineResult,
     Study,
@@ -69,9 +76,11 @@ from .study import (
     SweepResult,
     SweepStats,
     WinnerPlacement,
+    default_stores,
 )
 
 __all__ = [
+    "AliasStore",
     "Axis",
     "Constraint",
     "CrossMachineResult",
@@ -80,6 +89,7 @@ __all__ = [
     "KERNELS",
     "MACHINES",
     "ResultStore",
+    "ShardedStore",
     "SearchSpace",
     "Study",
     "StudyResult",
@@ -90,7 +100,6 @@ __all__ = [
     "WinnerPlacement",
     "canonical_key",
     "canonical_machine_name",
-    "compare",
     "default_objectives",
     "default_stores",
     "choice",
@@ -102,11 +111,11 @@ __all__ = [
     "irange",
     "max_volume",
     "multiple_of",
+    "open_store",
     "pareto_front",
     "pow2",
     "predicate",
     "prune_configs",
-    "sweep",
     "top_k",
     "upper_bound_glups",
     "validate_objectives",

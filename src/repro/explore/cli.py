@@ -19,7 +19,7 @@ import json
 import sys
 
 from ..obs import trace as obs_trace
-from .crossmachine import default_stores
+from ..store import ResultStore, open_store
 from .registry import (
     KERNELS,
     MACHINES,
@@ -27,8 +27,7 @@ from .registry import (
     get_kernel,
     get_machine,
 )
-from .store import ResultStore
-from .study import CrossMachineResult, Study, SweepResult
+from .study import CrossMachineResult, Study, SweepResult, default_stores
 
 
 def _build_parser() -> argparse.ArgumentParser:
@@ -53,6 +52,14 @@ def _build_parser() -> argparse.ArgumentParser:
                    help="result store path (default results/explore/<kernel>__<machine>__<method>.jsonl;"
                         " per-machine defaults with --machines)")
     p.add_argument("--no-store", action="store_true", help="disable the persistent cache")
+    p.add_argument("--store-backend", default=None, choices=("jsonl", "sharded"),
+                   help="force a store backend (default: resolve from what's on "
+                        "disk — a directory opens the sharded multi-writer store, "
+                        "a .jsonl path the single-file one)")
+    p.add_argument("--alias", nargs="?", const=True, default=None, metavar="PATH",
+                   help="config->fingerprint alias store so warm re-runs skip IR "
+                        "tracing (bare --alias uses the default path next to the "
+                        "result store; invalidated wholesale on a builder bump)")
     p.add_argument("--workers", type=int, default=0,
                    help="process-pool workers for cache misses (0 = serial)")
     p.add_argument("--prune", action="store_true",
@@ -273,6 +280,12 @@ def main(argv: list[str] | None = None) -> int:
         argv = sys.argv[1:]
     if argv and argv[0] == "graph":
         return _graph_main(argv[1:])
+    if argv and argv[0] == "serve":
+        from .serve import serve_main
+
+        return serve_main(argv[1:])
+    if argv and argv[0] == "store":
+        return _store_main(argv[1:])
     args = _build_parser().parse_args(argv)
     if args.list:
         for name, e in sorted(KERNELS.items()):
@@ -322,6 +335,7 @@ def _run(args, entry, method: str) -> int:
                 keep_fraction=args.keep_fraction,
                 sample=args.sample,
                 seed=args.seed,
+                alias=args.alias,
             )
             cm = study.compare()
         except (ValueError, KeyError) as e:
@@ -353,8 +367,9 @@ def _run(args, entry, method: str) -> int:
         return _fail(e)
     store = None
     if not args.no_store:
-        store = ResultStore(
-            args.store or ResultStore.default_path(entry.name, machine_key, method)
+        store = open_store(
+            args.store or ResultStore.default_path(entry.name, machine_key, method),
+            backend=args.store_backend,
         )
     try:
         study = Study(
@@ -367,6 +382,7 @@ def _run(args, entry, method: str) -> int:
             keep_fraction=args.keep_fraction,
             sample=args.sample,
             seed=args.seed,
+            alias=args.alias,
         )
         res = study.result()
     except (ValueError, KeyError) as e:
@@ -403,4 +419,50 @@ def _run(args, entry, method: str) -> int:
     if report is not None:
         print()
         print(report.render())
+    return 0
+
+
+def _store_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.explore store",
+        description="Result-store maintenance: inspect and compact stores "
+                    "(single-file .jsonl or sharded directories).",
+    )
+    sub = p.add_subparsers(dest="cmd", required=True)
+    info = sub.add_parser("info", help="entry counts, machines, builder versions, segments")
+    info.add_argument("path", help="store path (.jsonl file or sharded directory)")
+    comp = sub.add_parser(
+        "compact",
+        help="fold the log to one line per live key (sharded: folds every "
+             "writer segment into compacted.jsonl under the directory lock)",
+    )
+    comp.add_argument("path", help="store path (.jsonl file or sharded directory)")
+    return p
+
+
+def _store_main(argv: list[str]) -> int:
+    args = _store_parser().parse_args(argv)
+    try:
+        store = open_store(args.path)
+    except (OSError, ValueError) as e:
+        return _fail(e)
+    kind = type(store).__name__
+    if args.cmd == "compact":
+        before = len(store)
+        segs = store.segments() if hasattr(store, "segments") else None
+        store.compact()
+        line = f"compacted {args.path} [{kind}]: {before} live entries"
+        if segs is not None:
+            line += f" (folded {len(segs)} layer(s) into compacted.jsonl)"
+        print(line)
+        return 0
+    print(f"store:    {args.path} [{kind}]")
+    print(f"entries:  {len(store)}")
+    machines = {str(k): v for k, v in store.machines().items()}
+    print(f"machines: {json.dumps(machines, sort_keys=True)}")
+    bvs = {str(k): v for k, v in store.builder_versions().items()}
+    print(f"builder_versions: {json.dumps(bvs, sort_keys=True)}")
+    if hasattr(store, "segments"):
+        for name, n in store.segments().items():
+            print(f"segment:  {name} ({n} lines)")
     return 0

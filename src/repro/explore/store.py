@@ -1,278 +1,26 @@
-"""Persistent on-disk result store for exploration sweeps.
+"""Compatibility shim: the result store grew into :mod:`repro.store`.
 
-Append-only JSON-lines file: one ``{"key": ..., "payload": ..., "machine": ...}``
-record per estimated configuration.  Loading replays the log into a dict (last
-write wins), so re-running a sweep is incremental — already-estimated configs
-are cache hits and only new configs cost estimator time.  Corrupt/truncated
-trailing lines (e.g. from a killed sweep) are skipped, which makes interrupted
-sweeps resumable.
-
-Warm-path scaling (``load_workers``): a 100k-entry store used to pay a full
-``json.loads`` per line before the first cache hit could be served.  The
-default load is now *lazy*: the replay pass decodes only each record's key (a
-prefix scan — we write the ``key`` field first) and keeps the raw line;
-payloads deserialize on first :meth:`get` hit.  A warm sweep therefore parses
-exactly the records it touches, superseded duplicates never parse at all, and
-aggregate views (:meth:`machines`, :meth:`compact`) materialize on demand.
-``load_workers=0`` forces the legacy eager serial parse; ``load_workers=N``
-parses eagerly in parallel line chunks on a process pool (worth it for full
-materialization on many-core hosts; the parent-side unpickle bounds the gain).
-One visible lazy-mode caveat: a corrupt line whose *key* still scans (a torn
-write ending on ``}``) counts toward ``len()``/``keys()`` until something
-touches it — first touch falls back to an eager reload, after which contents
-match ``load_workers=0`` exactly.
-
-Schema notes (v4): records carry two optional provenance fields next to the
-payload — ``machine`` (which architecture produced the record, added for
-cross-machine exploration) and ``builder_version`` (the
-:data:`repro.frontend.ir.BUILDER_VERSION` token of the IR-builder pipeline
-that produced the estimate, added with the unified v4 payload schema).  Both
-are *accounting* fields: the cache key already disambiguates machines and
-builder versions, so files written before either field existed load fine (the
-fields read as ``None``) and old readers ignore them.  v3-keyed records in an
-existing file are never *hits* under v4 keys (the key string embeds the
-version), but they still load, count and survive :meth:`compact` — a re-run
-simply re-estimates and appends v4 records alongside.
+``repro.explore.store.ResultStore`` (and ``canonical_key``) keep working —
+they ARE the ``repro.store`` objects.  New code should import from
+:mod:`repro.store`, which also has the sharded multi-writer backend
+(:class:`~repro.store.sharded.ShardedStore`), the config→fingerprint alias
+layer (:class:`~repro.store.alias.AliasStore`) and the backend-resolving
+:func:`~repro.store.open_store`.
 """
-from __future__ import annotations
+from ..store import (  # noqa: F401
+    AliasStore,
+    ResultStore,
+    ShardedStore,
+    alias_key,
+    canonical_key,
+    open_store,
+)
 
-import json
-import os
-from pathlib import Path
-from typing import Iterator
-
-from ..obs import metrics as obs_metrics
-from ..obs import trace as obs_trace
-
-_KEY_PREFIX = '{"key":'
-_DECODER = json.JSONDecoder()
-
-
-def canonical_key(**parts) -> str:
-    """Stable cache key from JSON-able parts (tuples normalise to lists)."""
-    return json.dumps(parts, sort_keys=True, separators=(",", ":"), default=list)
-
-
-def _parse_store_lines(lines: list[str]) -> list[tuple]:
-    """Eagerly deserialize a chunk of JSONL records (module-level: picklable
-    for the load pool).  Corrupt lines — the truncated tail of a killed
-    sweep — skip."""
-    out: list[tuple] = []
-    for line in lines:
-        line = line.strip()
-        if not line:
-            continue
-        try:
-            rec = json.loads(line)
-            # records predating either provenance field read it as None
-            out.append(
-                (rec["key"], rec["payload"], rec.get("machine"), rec.get("builder_version"))
-            )
-        except (json.JSONDecodeError, KeyError, TypeError):
-            continue
-    return out
-
-
-def _scan_key(line: str) -> str | None:
-    """Decode ONLY the key of one record (we always write ``key`` first).
-
-    ~10x cheaper than parsing the full payload; returns None for lines that
-    need the eager fallback (foreign field order, corrupt tail, non-str key).
-    """
-    if not (line.startswith(_KEY_PREFIX) and line.endswith("}")):
-        return None
-    i = len(_KEY_PREFIX)
-    while i < len(line) and line[i] == " ":
-        i += 1
-    try:
-        key, _ = _DECODER.raw_decode(line, i)
-    except ValueError:
-        return None
-    return key if isinstance(key, str) else None
-
-
-class ResultStore:
-    """Dict-like persistent store backed by an append-only JSONL file.
-
-    ``load_workers=None`` (default): lazy key-scan load, payloads parse on
-    first hit.  ``0``: eager serial parse.  ``N > 0``: eager parse over a
-    process pool in N line chunks.
-    """
-
-    # below this, even the eager path is cheap enough not to bother a pool
-    PARALLEL_MIN_LINES = 20_000
-
-    def __init__(self, path: str | os.PathLike, load_workers: int | None = None):
-        self.path = Path(path)
-        self.load_workers = load_workers
-        # values are parsed payload dicts, or the raw record line (lazy)
-        self._mem: dict[str, dict | str] = {}
-        self._machine: dict[str, str | None] = {}
-        self._builder: dict[str, object] = {}
-        self._load()
-
-    def _load(self) -> None:
-        with obs_trace.span("store.load", path=str(self.path)) as sp:
-            self._load_inner()
-            sp.set(entries=len(self._mem))
-        obs_metrics.histogram("store.load_seconds").observe(sp.duration_s)
-        obs_metrics.counter("store.loads").inc()
-
-    def _load_inner(self) -> None:
-        if not self.path.exists():
-            return
-        with self.path.open() as f:
-            lines = f.readlines()
-        workers = self.load_workers
-        if workers is None:
-            for raw in lines:
-                line = raw.strip()
-                if not line:
-                    continue
-                key = _scan_key(line)
-                if key is not None:
-                    self._mem[key] = line  # payload parses lazily on get()
-                    continue
-                for key, payload, machine, bv in _parse_store_lines([line]):
-                    self._mem[key] = payload
-                    self._machine[key] = machine
-                    self._builder[key] = bv
-            return
-        records = None
-        if workers > 1 and len(lines) > 1:
-            records = self._load_parallel(lines, workers)
-        if records is None:
-            records = _parse_store_lines(lines)
-        for key, payload, machine, bv in records:
-            self._mem[key] = payload
-            self._machine[key] = machine
-            self._builder[key] = bv
-
-    @staticmethod
-    def _load_parallel(lines, workers) -> list[tuple] | None:
-        """Chunked pool deserialization; chunk order preserves last-write-wins.
-        Returns None (caller falls back to serial) where pools cannot spawn."""
-        from concurrent.futures import ProcessPoolExecutor
-
-        size = -(-len(lines) // workers)
-        chunks = [lines[i : i + size] for i in range(0, len(lines), size)]
-        try:
-            with ProcessPoolExecutor(max_workers=workers) as pool:
-                return [
-                    rec
-                    for part in pool.map(_parse_store_lines, chunks)
-                    for rec in part
-                ]
-        except (OSError, RuntimeError):  # sandboxed / fork-restricted hosts
-            return None
-
-    def _materialize(self, key: str) -> dict | None:
-        """Parse a lazily-held record.
-
-        If the line turns out corrupt despite scanning a complete key (rare:
-        a torn write that happens to end on ``}``), fall back to one eager
-        reload of the whole file so that an earlier valid record for the same
-        key wins — identical visible semantics to ``load_workers=0``.
-        """
-        line = self._mem.get(key)
-        # already materialized — or dropped — by a corrupt-line reload below
-        if not isinstance(line, str):
-            return line
-        parsed = _parse_store_lines([line])
-        if not parsed or parsed[0][0] != key:
-            self._mem.clear()
-            self._machine.clear()
-            self._builder.clear()
-            if self.path.exists():
-                with self.path.open() as f:
-                    for k, payload, machine, bv in _parse_store_lines(f.readlines()):
-                        self._mem[k] = payload
-                        self._machine[k] = machine
-                        self._builder[k] = bv
-            return self._mem.get(key)
-        _, payload, machine, bv = parsed[0]
-        self._mem[key] = payload
-        self._machine[key] = machine
-        self._builder[key] = bv
-        return payload
-
-    def _materialize_all(self) -> None:
-        for key in [k for k, v in self._mem.items() if isinstance(v, str)]:
-            self._materialize(key)
-
-    def get(self, key: str) -> dict | None:
-        v = self._mem.get(key)
-        if isinstance(v, str):
-            return self._materialize(key)
-        return v
-
-    def put(
-        self,
-        key: str,
-        payload: dict,
-        machine: str | None = None,
-        builder_version: int | str | None = None,
-    ) -> None:
-        # span granularity: one append per estimated config — a disabled span
-        # is two perf_counter calls, and the always-on latency histogram is
-        # what the phase breakdown in BENCH_sweep.json reads
-        with obs_trace.span("store.append") as sp:
-            self._mem[key] = payload
-            self._machine[key] = machine
-            self._builder[key] = builder_version
-            self.path.parent.mkdir(parents=True, exist_ok=True)
-            rec: dict = {"key": key, "payload": payload}
-            if machine is not None:
-                rec["machine"] = machine
-            if builder_version is not None:
-                rec["builder_version"] = builder_version
-            with self.path.open("a") as f:
-                f.write(json.dumps(rec, default=list) + "\n")
-        obs_metrics.histogram("store.append_seconds").observe(sp.duration_s)
-
-    def __contains__(self, key: str) -> bool:
-        return key in self._mem
-
-    def __len__(self) -> int:
-        return len(self._mem)
-
-    def keys(self) -> Iterator[str]:
-        return iter(self._mem)
-
-    def machines(self) -> dict[str | None, int]:
-        """Live-entry count per machine name (``None`` = pre-schema records)."""
-        self._materialize_all()
-        out: dict[str | None, int] = {}
-        for key in self._mem:
-            m = self._machine.get(key)
-            out[m] = out.get(m, 0) + 1
-        return out
-
-    def builder_versions(self) -> dict:
-        """Live-entry count per IR-builder version (``None`` = pre-v4 records)."""
-        self._materialize_all()
-        out: dict = {}
-        for key in self._mem:
-            bv = self._builder.get(key)
-            out[bv] = out.get(bv, 0) + 1
-        return out
-
-    def compact(self) -> None:
-        """Rewrite the log with one line per live key (drops superseded writes)."""
-        self._materialize_all()
-        tmp = self.path.with_suffix(".tmp")
-        with tmp.open("w") as f:
-            for key, payload in self._mem.items():
-                rec: dict = {"key": key, "payload": payload}
-                if self._machine.get(key) is not None:
-                    rec["machine"] = self._machine[key]
-                if self._builder.get(key) is not None:
-                    rec["builder_version"] = self._builder[key]
-                f.write(json.dumps(rec, default=list) + "\n")
-        tmp.replace(self.path)
-
-    @staticmethod
-    def default_path(
-        kernel: str, machine: str, method: str, root: str | os.PathLike = "results/explore"
-    ) -> Path:
-        return Path(root) / f"{kernel}__{machine}__{method}.jsonl"
+__all__ = [
+    "AliasStore",
+    "ResultStore",
+    "ShardedStore",
+    "alias_key",
+    "canonical_key",
+    "open_store",
+]

@@ -26,10 +26,15 @@ persistent store — and every downstream surface (``.top()``, ``.pareto()``,
   call");
 * store keys are versioned (``v4``) canonical fingerprints carrying the
   :data:`repro.frontend.ir.BUILDER_VERSION` token, so payloads estimated
-  under older IR builders can never be served to newer ones.
+  under older IR builders can never be served to newer ones;
+* with an ``alias=`` store (:class:`repro.store.AliasStore`), candidate
+  fingerprints resolve from the persistent config→fingerprint map instead of
+  re-tracing: a fully-warm sweep (every key already in the store) runs with
+  **zero** IR traces — no ``study.trace_ir`` span at all — and cold misses
+  trace lazily, exactly the configs the store couldn't serve.
 
-``repro.explore.engine.sweep`` and ``repro.explore.crossmachine.compare`` are
-kept as deprecation shims over this class.
+The pre-``Study`` entry points (``engine.sweep`` / ``crossmachine.compare``,
+deprecated shims since PR 5) are gone; this class is the one sweep API.
 """
 from __future__ import annotations
 
@@ -38,6 +43,7 @@ import hashlib
 import json
 from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Callable, Sequence
 
 from ..core.capacity import CapacityFits
@@ -51,11 +57,18 @@ from ..frontend.lower import from_kernel_spec, lower_gpu
 from ..frontend.pallas import trace_pallas
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
+from ..store import (
+    AliasStore,
+    ResultStore,
+    ShardedStore,
+    alias_key,
+    canonical_key,
+    open_store,
+)
 from . import pareto as pareto_mod
 from .prune import PruneReport, prune_configs
 from .registry import KernelEntry, get_estimator, get_kernel, get_machine
 from .space import FilterReport, SearchSpace, subsample
-from .store import ResultStore, canonical_key
 
 # v2: cache keys fingerprint the FULL machine constants
 # v3: config identity is the canonical AccessIR fingerprint — semantically
@@ -89,6 +102,44 @@ def _machine_tag(machine) -> str:
 
 def _cfg_key(config: dict) -> str:
     return canonical_key(config=config)
+
+
+def store_key(
+    fingerprint: str,
+    machine_name: str,
+    method: str,
+    machine_tag: str,
+    fits_tag: str | None = None,
+) -> str:
+    """The v4 result-store key for one (config fingerprint, machine, method).
+
+    Module-level so the serve daemon builds byte-identical keys to a
+    :class:`Study` (``BUILDER_VERSION`` is read at call time — a builder bump
+    re-keys everything immediately)."""
+    parts = dict(
+        v=_KEY_VERSION,
+        bv=_ir.BUILDER_VERSION,
+        ir=fingerprint,
+        machine=machine_name,
+        mconst=machine_tag,
+        method=method,
+    )
+    if fits_tag is not None:
+        parts["fits"] = fits_tag
+    return canonical_key(**parts)
+
+
+def default_stores(
+    kernel: str,
+    machine_names: Sequence[str],
+    method: str,
+    root: str = "results/explore",
+) -> dict[str, ResultStore]:
+    """One default-path store per machine (the CLI's --machines layout)."""
+    return {
+        name: open_store(ResultStore.default_path(kernel, name, method, root))
+        for name in machine_names
+    }
 
 
 # --------------------------------------------------------------------------- #
@@ -306,12 +357,17 @@ def resolve_machines(machines: Sequence) -> list[tuple[str, GPUMachine | TPUMach
 
 @dataclass
 class _Candidate:
-    """One configuration, traced once and shared by every machine in the study."""
+    """One configuration, traced at most once and shared by every machine.
+
+    ``fp`` resolves from the alias store when one is attached (no trace);
+    ``ir`` stays None until something actually needs the address stream — a
+    store miss, a prune pass, an explain — and traces on demand then.  A
+    fully-warm aliased sweep finishes with every ``ir`` still None."""
 
     config: dict  # identity dict stamped on records / store payloads
-    ir: object  # canonical AccessIR
-    fp: str  # ir_fingerprint(ir)
     raw: object  # original config (dict / PallasConfig) for builders & workers
+    ir: object | None = None  # canonical AccessIR, traced lazily
+    fp: str | None = None  # ir_fingerprint(ir), or the alias store's answer
     spec: object | None = None  # GPU KernelSpec, built lazily on demand
 
 
@@ -472,8 +528,14 @@ class Study:
 
     ``store`` (single machine) / ``stores`` (label -> store) make the study
     persistent and resumable; keys are canonical AccessIR fingerprints
-    versioned with :data:`repro.frontend.ir.BUILDER_VERSION`.  ``workers > 0``
-    spreads GPU cache-miss chunks over a process pool (registry kernels only).
+    versioned with :data:`repro.frontend.ir.BUILDER_VERSION`.  Paths resolve
+    through :func:`repro.store.open_store` (a directory = the sharded
+    multi-writer backend, ``.jsonl`` = the single-file one).  ``alias=`` adds
+    the config→fingerprint layer (an :class:`~repro.store.AliasStore`, a
+    path, or ``True`` for the default path next to the stores): candidate
+    fingerprints then come from the alias map and a fully-warm sweep skips IR
+    tracing entirely.  ``workers > 0`` spreads GPU cache-miss chunks over a
+    process pool (registry kernels only).
 
     :meth:`run` executes (lazily on first ``.top()/.pareto()/.compare()``),
     :meth:`resume` reloads the stores from disk and re-runs incrementally,
@@ -499,6 +561,7 @@ class Study:
         sample: int | None = None,
         seed: int = 0,
         cache: EstimateCache | None = None,
+        alias=None,
     ):
         self.name, self.entry, self._build, self._build_ir = _resolve(kernel, backend)
         self.backend = self.entry.backend if self.entry is not None else "gpu"
@@ -566,8 +629,41 @@ class Study:
             except KeyError:
                 pass
             if isinstance(s, (str, bytes)) or hasattr(s, "__fspath__"):
-                s = ResultStore(s)
+                # backend resolved from disk: a directory opens the sharded
+                # multi-writer store, a .jsonl path the single-file one
+                s = open_store(s)
             self._stores[label] = s
+
+        # the config→fingerprint alias layer only applies where the IR is a
+        # deterministic function of the config identity: registry kernels
+        # (GPU build_ir / registry-generated tpu_configs).  Custom builder
+        # callables and user-passed PallasConfig lists under-determine the IR
+        # from the config dict, so an alias there could serve a wrong
+        # fingerprint — refuse instead of silently mis-keying.
+        self._alias_eligible = self.entry is not None and (
+            self.backend == "gpu" or self.configs is None
+        )
+        self.alias: AliasStore | None = None
+        if alias:
+            if not self._alias_eligible:
+                raise ValueError(
+                    "alias= needs a registry kernel whose IR is reconstructible "
+                    "from the config identity; custom builder callables and "
+                    "user-passed PallasConfig lists don't qualify"
+                )
+            if isinstance(alias, AliasStore):
+                self.alias = alias
+            elif alias is True:
+                root = (
+                    next(iter(self._stores.values())).path.parent
+                    if self._stores
+                    else Path("results/explore")
+                )
+                self.alias = AliasStore(
+                    AliasStore.default_path(self.name, self.backend, root)
+                )
+            else:
+                self.alias = AliasStore(alias)
 
         self._estimator = get_estimator(self.backend, method=self.method, fits=fits)
         self._cands: list[_Candidate] | None = None
@@ -606,10 +702,16 @@ class Study:
         """Reload the persistent stores from disk and re-run: everything
         estimated before (this process or another) is a cache hit, only new
         (config, machine) pairs cost estimator time."""
-        self._stores = {
-            label: ResultStore(s.path, load_workers=s.load_workers)
-            for label, s in self._stores.items()
-        }
+        def reopen(s):
+            if isinstance(s, ShardedStore):
+                return ShardedStore(
+                    s.path, load_workers=s.load_workers, writer_id=s.writer_id
+                )
+            if isinstance(s, ResultStore):
+                return type(s)(s.path, load_workers=s.load_workers)
+            return s  # custom store protocol object: nothing to reload
+
+        self._stores = {label: reopen(s) for label, s in self._stores.items()}
         return self.run()
 
     def result(self, machine: str | None = None) -> SweepResult:
@@ -716,6 +818,8 @@ class Study:
                 raise KeyError(
                     f"config {rec.config!r} has no traced candidate in this study"
                 )
+            if cand.ir is None:
+                self._trace([cand])
             return explain_mod.explain_tpu_record(rec, cand.ir, machine)
         fits = self.fits if self.fits is not None else machine.fits
         return explain_mod.explain_gpu_record(
@@ -764,6 +868,8 @@ class Study:
         # was still traced during candidate enumeration, so estimate it now.
         for cand in self._candidates():
             if _cfg_key(retuple(cand.config)) == want:
+                if cand.ir is None:
+                    self._trace([cand])
                 kwargs = {"configs": [cand.config], "cache": self.cache}
                 if self.backend == "gpu":
                     kwargs["specs"] = [self._spec(cand)]
@@ -779,9 +885,11 @@ class Study:
         return self._result if self._result is not None else self.run()
 
     def _candidates(self) -> list[_Candidate]:
-        """Enumerate + trace the candidate list ONCE: every machine ranks the
-        exact same space, and each config's IR/fingerprint is computed a single
-        time however many machines the study spans."""
+        """Enumerate the candidate list ONCE: every machine ranks the exact
+        same space.  Fingerprints resolve from the alias store where one is
+        attached; everything the alias couldn't answer traces now (at most
+        once per config however many machines the study spans), and alias
+        hits stay un-traced until a store miss actually needs their IR."""
         if self._cands is not None:
             return self._cands
         cands: list[_Candidate] = []
@@ -793,19 +901,12 @@ class Study:
                     else self.entry.tpu_configs()
                 )
                 esp.set(configs=len(raw))
-            with obs_trace.span("study.trace_ir", kernel=self.name, configs=len(raw)):
-                for cfg in raw:
-                    # non-affine index_map closures raise NonAffineIndexMapError
-                    # here instead of silently aliasing a probe-compatible map
-                    ir = trace_pallas(cfg)
-                    cands.append(
-                        _Candidate(
-                            config=retuple({"name": cfg.name, **cfg.meta}),
-                            ir=ir,
-                            fp=ir_fingerprint(ir),
-                            raw=cfg,
-                        )
+            for cfg in raw:
+                cands.append(
+                    _Candidate(
+                        config=retuple({"name": cfg.name, **cfg.meta}), raw=cfg
                     )
+                )
         else:
             with obs_trace.span("study.enumerate", kernel=self.name) as esp:
                 if self.configs is None:
@@ -824,47 +925,57 @@ class Study:
                 if self.sample is not None:
                     raw = subsample(raw, self.sample, self.seed)
                 esp.set(configs=len(raw))
-            with obs_trace.span("study.trace_ir", kernel=self.name, configs=len(raw)):
-                for cfg in raw:
-                    if self._build_ir is not None:
-                        ir, spec = self._build_ir(**cfg), None
-                    else:
-                        # custom callable: recover the canonical IR from the
-                        # built spec, so lambdas/closures get a stable store
-                        # identity
-                        spec = self._build(**cfg)
-                        ir = from_kernel_spec(spec)
-                    cands.append(
-                        _Candidate(
-                            config=dict(cfg),
-                            ir=ir,
-                            fp=ir_fingerprint(ir),
-                            raw=cfg,
-                            spec=spec,
-                        )
-                    )
+            cands.extend(_Candidate(config=dict(cfg), raw=cfg) for cfg in raw)
+        if self.alias is not None:
+            for c in cands:
+                c.fp = self.alias.get(alias_key(self.name, self.backend, c.config))
+        self._trace([c for c in cands if c.fp is None])
         obs_metrics.counter("study.candidates").inc(len(cands))
         self._cands = cands
         return cands
 
+    def _trace(self, todo: list[_Candidate]) -> None:
+        """Trace the IR (and fingerprint) of exactly these candidates.
+
+        The ``study.trace_ir`` span only exists when there is something to
+        trace — a fully-warm aliased sweep exports no trace span at all,
+        which is the observable form of "warm queries skip IR tracing"."""
+        if not todo:
+            return
+        with obs_trace.span("study.trace_ir", kernel=self.name, configs=len(todo)):
+            for c in todo:
+                if self.backend == "tpu":
+                    # non-affine index_map closures raise NonAffineIndexMapError
+                    # here instead of silently aliasing a probe-compatible map
+                    c.ir = trace_pallas(c.raw)
+                elif self._build_ir is not None:
+                    c.ir = self._build_ir(**c.raw)
+                else:
+                    # custom callable: recover the canonical IR from the built
+                    # spec, so lambdas/closures get a stable store identity
+                    c.spec = self._build(**c.raw)
+                    c.ir = from_kernel_spec(c.spec)
+                fp = ir_fingerprint(c.ir)
+                if c.fp is not None and c.fp != fp:
+                    # the trace is ground truth; overwrite the stale alias
+                    obs_metrics.counter("alias.mismatch").inc()
+                c.fp = fp
+                if self.alias is not None:
+                    self.alias.put(
+                        alias_key(self.name, self.backend, c.config), fp
+                    )
+
     def _spec(self, cand: _Candidate):
         """The GPU KernelSpec of a candidate (lowered once, then shared)."""
         if cand.spec is None:
-            cand.spec = lower_gpu(cand.ir)
+            if cand.ir is None:
+                self._trace([cand])
+            if cand.spec is None:  # _trace fills it on the custom-callable path
+                cand.spec = lower_gpu(cand.ir)
         return cand.spec
 
     def _key(self, cand: _Candidate, machine, machine_tag: str, fits_tag: str | None) -> str:
-        parts = dict(
-            v=_KEY_VERSION,
-            bv=_ir.BUILDER_VERSION,
-            ir=cand.fp,
-            machine=machine.name,
-            mconst=machine_tag,
-            method=self.method,
-        )
-        if fits_tag is not None:
-            parts["fits"] = fits_tag
-        return canonical_key(**parts)
+        return store_key(cand.fp, machine.name, self.method, machine_tag, fits_tag)
 
     def _run_machine(self, label: str, machine, cands: list[_Candidate]) -> SweepResult:
         store = self._stores.get(label)
@@ -944,6 +1055,13 @@ class Study:
                 and self.entry is not None
                 and len(misses) > 1
             )
+            if misses and not use_pool:
+                # alias-resolved candidates were never traced; the ones the
+                # store couldn't serve need their IR now (the pool path skips
+                # this — workers rebuild IRs from raw configs themselves)
+                self._trace(
+                    [cands[ci] for _, ci, _ in misses if cands[ci].ir is None]
+                )
             if use_pool:
                 # chunk so each worker message amortizes the batch path's hoisting
                 per_worker = -(-len(misses) // self.workers)

@@ -1,9 +1,10 @@
 """Process-global metrics registry (`repro.obs` pillar 2).
 
 Counters, gauges and histograms for the estimation stack: store cache
-hits/misses, configs pruned per rule, ``estimate_many`` batch sizes and
-per-batch latency, Pallas probe counts per kernel trace, store load/append
-latency, deprecation-shim call counts.  Everything is a plain in-process
+hits/misses, alias-layer hits/misses, configs pruned per rule,
+``estimate_many`` batch sizes and per-batch latency, Pallas probe counts per
+kernel trace, store load/append latency, serve-daemon queries and batch
+occupancy.  Everything is a plain in-process
 object — no exporter, no sampling thread, no dependencies — cheap enough to
 stay always-on (instrumentation sits at phase/batch granularity, never inside
 the per-config hot loop).

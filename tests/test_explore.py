@@ -10,6 +10,7 @@ from repro.core import appspec, estimator, model, ranking
 from repro.core.machine import V100
 from repro.explore import (
     SearchSpace,
+    Study,
     choice,
     divides_grid,
     exact_volume,
@@ -18,7 +19,6 @@ from repro.explore import (
     pareto_front,
     pow2,
     prune_configs,
-    sweep,
     upper_bound_glups,
 )
 from repro.explore.registry import lbm_d3q15_space, stencil25_space
@@ -29,6 +29,16 @@ GRID = (128, 64, 64)  # reduced grid keeps each full estimate cheap
 
 def build_small(block, fold=(1, 1, 1)):
     return appspec.star3d(block=block, fold=fold, grid=GRID)
+
+
+def sweep(kernel, **kw):
+    """Single-machine Study shorthand (the old ``engine.sweep`` surface)."""
+    return Study(kernel, **kw).result()
+
+
+def compare(kernel, machines, configs=None):
+    """Multi-machine Study shorthand (the old ``crossmachine.compare``)."""
+    return Study(kernel, configs=configs, machines=machines).compare()
 
 
 # --------------------------------------------------------------------------- #
@@ -436,8 +446,6 @@ def test_per_machine_fits_used_when_fits_omitted():
 
 
 def test_crossmachine_compare_gpu():
-    from repro.explore.crossmachine import compare
-
     cm = compare("stencil25", ["v100", "a100"], configs=CFGS)
     assert cm.machines == ["V100", "A100"]
     assert set(cm.results) == {"V100", "A100"}
@@ -452,9 +460,7 @@ def test_crossmachine_compare_gpu():
 
 
 def test_crossmachine_compare_rejects_bad_machine_sets():
-    from repro.explore.crossmachine import compare
-
-    with pytest.raises(ValueError, match="shared backend"):
+    with pytest.raises(ValueError, match="needs a GPUMachine"):
         compare("stencil25", ["v100", "tpuv5e"], configs=CFGS[:2])
     with pytest.raises(ValueError, match="duplicate"):
         compare("stencil25", ["v100", "V100"], configs=CFGS[:2])
@@ -467,8 +473,6 @@ def test_crossmachine_compare_accepts_unregistered_machine_instances():
     a convenience, not a gate; the instance's own name becomes its label."""
     import dataclasses
 
-    from repro.explore.crossmachine import compare
-
     big_l2 = dataclasses.replace(V100, name="V100-hypothetical-24MB-L2",
                                  l2_bytes=24 * 1024 * 1024)
     cm = compare("stencil25", [V100, big_l2], configs=CFGS)
@@ -478,16 +482,12 @@ def test_crossmachine_compare_accepts_unregistered_machine_instances():
 
 def test_crossmachine_tau_is_none_without_common_configs():
     """< 2 shared survivors must report tau=None, never a fake +1.0."""
-    from repro.explore.crossmachine import compare
-
     cm = compare("stencil25", ["v100", "a100"], configs=CFGS[:1])
     assert cm.tau[("V100", "A100")] is None
     assert cm.summary()["kendall_tau"] == {"V100/A100": None}
 
 
 def test_crossmachine_compare_tpu_generations():
-    from repro.explore.crossmachine import compare
-
     cm = compare("wkv_tpu", ["tpuv5e", "tpuv6e"])
     assert cm.backend == "tpu" and cm.score_metric == "time_s"
     assert cm.machines == ["TPUv5e", "TPUv6e"]

@@ -170,7 +170,7 @@ def test_estimate_raises_on_non_affine_index_map():
 def test_sweep_raises_on_non_affine_index_map(tmp_path):
     """The store path must refuse (not silently alias) a non-affine map that
     agrees with an affine one at the origin/unit-step probes."""
-    from repro.explore import sweep
+    from repro.explore import Study
 
     cfg = te.PallasConfig(
         name="clamped",
@@ -181,7 +181,7 @@ def test_sweep_raises_on_non_affine_index_map(tmp_path):
         flops_per_step=0.0,
     )
     with pytest.raises(NonAffineIndexMapError):
-        sweep("stencil25_tpu", configs=[cfg], store=tmp_path / "s.jsonl")
+        Study("stencil25_tpu", configs=[cfg], store=tmp_path / "s.jsonl").result()
 
 
 def test_trace_pallas_roundtrips_with_lower_tpu():

@@ -1,5 +1,5 @@
 """The IR frontend's payoff: attention and wkv rank end-to-end through the GPU
-analytic pipeline (estimate_many + sweep + crossmachine + CLI), store keys are
+analytic pipeline (estimate_many + Study + cross-machine + CLI), store keys are
 canonical AccessIR fingerprints (spelling-invariant, collision-free), and large
 stores load in parallel."""
 from __future__ import annotations
@@ -10,11 +10,20 @@ import pytest
 
 from repro.core import estimator, model
 from repro.core.machine import A100_40GB, V100
-from repro.explore import sweep
-from repro.explore.crossmachine import compare
+from repro.explore import Study
 from repro.explore.registry import attention_gpu_space, get_kernel, wkv_gpu_space
 from repro.explore.store import ResultStore
 from repro.frontend import attention_gpu_ir, ir_fingerprint, lower_gpu, wkv_gpu_ir
+
+
+def sweep(kernel, configs=None, machine=None, store=None):
+    """Single-machine Study shorthand (the old ``engine.sweep`` surface)."""
+    return Study(kernel, configs=configs, machine=machine, store=store).result()
+
+
+def compare(kernel, machines, configs=None):
+    """Multi-machine Study shorthand (the old ``crossmachine.compare``)."""
+    return Study(kernel, configs=configs, machines=machines).compare()
 
 # small problem instances keep each full estimate cheap
 ATTN = dict(s=512, heads=8, d=16)

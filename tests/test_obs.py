@@ -267,14 +267,30 @@ def test_prune_rule_counters():
     assert dropped.get("prune.dropped{rule=roofline}", 0) > 0
 
 
-def test_deprecation_shim_counters():
-    from repro.explore import sweep
+def test_alias_layer_counters_and_warm_trace_free_sweep(tmp_path):
+    """Cold aliased sweep: every candidate is an alias miss (then traced);
+    warm re-run: all alias hits, zero store misses, and — the service-layer
+    contract — NO study.trace_ir span at all."""
+    store = tmp_path / "st.jsonl"
+    alias = tmp_path / "alias.jsonl"
+    before = metrics.snapshot()
+    Study("stencil25", sample=4, seed=7, machine=V100, store=store, alias=alias).result()
+    d = metrics.diff(before, metrics.snapshot())
+    assert d["counters"]["alias.misses"] == 4
+    assert d["counters"].get("alias.hits", 0) == 0
 
     before = metrics.snapshot()
-    with pytest.warns(DeprecationWarning):
-        sweep("stencil25", sample=4, seed=7, machine=V100)
+    tracer = trace.enable()
+    res = Study(
+        "stencil25", sample=4, seed=7, machine=V100, store=store, alias=alias
+    ).result()
+    names = tracer.span_names()
+    trace.disable()
     d = metrics.diff(before, metrics.snapshot())
-    assert d["counters"]["deprecated.calls{api=engine.sweep}"] == 1
+    assert d["counters"]["alias.hits"] == 4
+    assert res.stats.cache_hits == 4 and res.stats.evaluated == 0
+    assert "study.trace_ir" not in names
+    assert "study.enumerate" in names and "sweep.store_lookup" in names
 
 
 def test_pallas_probe_metrics():

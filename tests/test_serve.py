@@ -1,0 +1,252 @@
+"""The estimation service daemon (`repro.explore.serve`).
+
+Covers the service contracts:
+
+* cold queries estimate + persist, warm queries serve alias -> store with
+  NO estimation, and both return the same wire records;
+* two *processes* can share one daemon: one client warms the state, the
+  other's queries are pure alias/store hits (alias-hit metric > 0);
+* the wire schema carries everything a client-side ``record_from_payload``
+  needs (config/metrics/volumes/time_s/limiter/feasible/fingerprint);
+* TPU queries resolve registry config identities back to PallasConfigs and
+  reject identities the daemon cannot reconstruct;
+* ``python -m repro.explore serve`` starts, serves both clients of the CI
+  smoke scenario, and shuts down cleanly over HTTP.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.core.record import record_from_payload
+from repro.explore.registry import get_kernel
+from repro.explore.serve import EstimationService, ServeClient, ServeError, serve
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+CFGS = [
+    {"block": (32, 8, 4), "fold": (1, 1, 1)},
+    {"block": (16, 8, 8), "fold": (1, 1, 1)},
+    {"block": (4, 16, 16), "fold": (1, 1, 2)},
+]
+
+WIRE_FIELDS = {
+    "config",
+    "backend",
+    "metrics",
+    "volumes",
+    "time_s",
+    "limiter",
+    "feasible",
+    "fingerprint",
+    "from_cache",
+}
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    return env
+
+
+@pytest.fixture
+def daemon(tmp_path):
+    """An in-process daemon on a free port, torn down clean."""
+    server, service = serve(port=0, root=str(tmp_path))
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    try:
+        yield server.server_address[1], service
+    finally:
+        server.shutdown()
+        server.server_close()
+        service.close()
+        thread.join(timeout=10)
+
+
+# --------------------------------------------------------------------------- #
+# warm/cold semantics + wire schema
+
+
+def test_cold_then_warm_queries_roundtrip(daemon):
+    port, service = daemon
+    client = ServeClient(port=port)
+    cold = client.estimate("stencil25", CFGS, machine="v100")
+    assert cold["stats"] == {"alias_hits": 0, "store_hits": 0, "estimated": 3}
+    assert len(cold["records"]) == 3
+    for wire in cold["records"]:
+        assert WIRE_FIELDS <= set(wire)
+        assert wire["backend"] == "gpu" and wire["from_cache"] is False
+        assert wire["metrics"]["glups"] > 0
+        # the wire payload reconstructs a full client-side record
+        rec = record_from_payload(wire, fingerprint=wire["fingerprint"])
+        assert rec.metrics == wire["metrics"] and rec.feasible
+
+    warm = client.estimate("stencil25", CFGS, machine="v100")
+    assert warm["stats"] == {"alias_hits": 3, "store_hits": 3, "estimated": 0}
+    strip = lambda recs: [
+        {k: v for k, v in r.items() if k != "from_cache"} for r in recs
+    ]
+    assert strip(warm["records"]) == strip(cold["records"])
+    assert all(r["from_cache"] for r in warm["records"])
+    client.close()
+
+
+def test_partial_warm_batch_mixes_hits_and_misses(daemon):
+    port, _ = daemon
+    client = ServeClient(port=port)
+    client.estimate("stencil25", CFGS[:1], machine="v100")
+    mixed = client.estimate("stencil25", CFGS, machine="v100")
+    assert mixed["stats"]["store_hits"] == 1 and mixed["stats"]["estimated"] == 2
+    assert [r["from_cache"] for r in mixed["records"]] == [True, False, False]
+    client.close()
+
+
+def test_machines_key_stores_apart(daemon):
+    port, _ = daemon
+    client = ServeClient(port=port)
+    client.estimate("stencil25", CFGS[:1], machine="v100")
+    other = client.estimate("stencil25", CFGS[:1], machine="a100")
+    # same config, different machine: alias hits (fingerprint is machine-free)
+    # but the store misses -> re-estimated on the new machine
+    assert other["stats"] == {"alias_hits": 1, "store_hits": 0, "estimated": 1}
+    client.close()
+
+
+# --------------------------------------------------------------------------- #
+# two client processes sharing one daemon
+
+
+_CLIENT = """
+import json, sys
+from repro.explore.serve import ServeClient
+
+port, n = int(sys.argv[1]), int(sys.argv[2])
+cfgs = [
+    {"block": (32, 8, 4), "fold": (1, 1, 1)},
+    {"block": (16, 8, 8), "fold": (1, 1, 1)},
+    {"block": (4, 16, 16), "fold": (1, 1, 2)},
+][:n]
+client = ServeClient(port=port)
+out = client.estimate("stencil25", cfgs, machine="v100")
+print(json.dumps(out))
+"""
+
+
+def _client_query(port, n=3):
+    proc = subprocess.run(
+        [sys.executable, "-c", _CLIENT, str(port), str(n)],
+        env=_env(),
+        capture_output=True,
+        timeout=120,
+    )
+    assert proc.returncode == 0, proc.stderr.decode()
+    return json.loads(proc.stdout)
+
+
+def test_two_client_processes_share_warm_state(daemon):
+    port, service = daemon
+    first = _client_query(port)  # process A: cold
+    second = _client_query(port)  # process B: fully warm
+    assert first["stats"]["estimated"] == 3
+    assert second["stats"] == {"alias_hits": 3, "store_hits": 3, "estimated": 0}
+    strip = lambda recs: [
+        {k: v for k, v in r.items() if k != "from_cache"} for r in recs
+    ]
+    assert strip(second["records"]) == strip(first["records"])
+    # the acceptance observable: alias hits showed up in the daemon's metrics
+    m = ServeClient(port=port).metrics()
+    assert m["serve"]["queries"] >= 6
+    assert m["serve"]["alias_hit_rate"] and m["serve"]["alias_hit_rate"] > 0
+    assert m["obs"]["counters"]["alias.hits"] >= 3
+
+
+# --------------------------------------------------------------------------- #
+# endpoints + error paths
+
+
+def test_health_and_metrics_schema(daemon):
+    port, _ = daemon
+    client = ServeClient(port=port)
+    health = client.health()
+    assert health["ok"] is True and health["uptime_s"] >= 0
+    m = client.metrics()
+    assert {"uptime_s", "queries", "queries_per_s", "alias_hit_rate",
+            "batch_occupancy", "cold_batches"} <= set(m["serve"])
+    assert {"counters", "gauges", "histograms"} <= set(m["obs"])
+    client.close()
+
+
+def test_unknown_kernel_and_bad_config_are_client_errors(daemon):
+    port, _ = daemon
+    client = ServeClient(port=port)
+    with pytest.raises(ServeError, match="stencil26"):
+        client.estimate("stencil26", CFGS[:1])
+    with pytest.raises(ServeError, match="not a config dict"):
+        client.estimate("stencil25", ["not-a-dict"], machine="v100")
+    client.close()
+
+
+def test_tpu_identity_resolution(daemon):
+    port, _ = daemon
+    client = ServeClient(port=port)
+    entry = get_kernel("wkv_tpu")
+    idents = [
+        {"name": cfg.name, **cfg.meta} for cfg in entry.tpu_configs()[:2]
+    ]
+    cold = client.estimate("wkv_tpu", idents)
+    assert cold["stats"]["estimated"] == 2
+    assert all(r["backend"] == "tpu" for r in cold["records"])
+    warm = client.estimate("wkv_tpu", idents)
+    assert warm["stats"] == {"alias_hits": 2, "store_hits": 2, "estimated": 0}
+    with pytest.raises(ServeError, match="cannot|not a registry"):
+        client.estimate("wkv_tpu", [{"name": "no-such-config"}])
+    client.close()
+
+
+def test_service_usable_in_process_without_http(tmp_path):
+    service = EstimationService(root=str(tmp_path))
+    try:
+        out = service.estimate("stencil25", CFGS[:2], machine="v100")
+        assert out["stats"]["estimated"] == 2
+        again = service.estimate("stencil25", CFGS[:2], machine="v100")
+        assert again["stats"]["store_hits"] == 2
+    finally:
+        service.close()
+
+
+# --------------------------------------------------------------------------- #
+# the CLI daemon end-to-end (``python -m repro.explore serve``)
+
+
+def test_cli_daemon_serves_and_shuts_down_clean(tmp_path):
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.explore", "serve", "--port", "0",
+         "--root", str(tmp_path)],
+        env=_env(),
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+        text=True,
+    )
+    try:
+        banner = proc.stdout.readline().strip()
+        assert banner.startswith("serving on http://")
+        port = int(banner.rsplit(":", 1)[1])
+        cold = _client_query(port, n=2)
+        warm = _client_query(port, n=2)
+        assert cold["stats"]["estimated"] == 2
+        assert warm["stats"] == {"alias_hits": 2, "store_hits": 2, "estimated": 0}
+        ServeClient(port=port).shutdown()
+        out, err = proc.communicate(timeout=30)
+        assert proc.returncode == 0, err
+        assert "served 4 queries" in out
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.communicate()

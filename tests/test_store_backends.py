@@ -1,0 +1,289 @@
+"""The pluggable store package (`repro.store`): backend dispatch, sharded
+multi-writer safety, torn-write accounting, and the alias layer.
+
+Covers the estimation-as-a-service storage contracts:
+
+* ``open_store`` resolves paths to the right backend (file -> JSONL,
+  directory -> sharded) and both backends are interchangeable views over the
+  same records;
+* the sharded backend survives two genuinely concurrent writer *processes*
+  with zero lost records — the regression test for the multi-writer design
+  goal (segment-per-writer + per-append flock);
+* the single-file backend's concurrent behavior is documented, not fixed:
+  complete lines always survive and torn tails are skipped, but nothing
+  coordinates two writers on one file — multi-writer workloads belong on
+  ``ShardedStore``;
+* lazy key scans validate record *closure*: a torn tail line never counts
+  toward ``len()``/``keys()`` even before any payload is materialized;
+* the alias layer maps configs to fingerprints under one ``BUILDER_VERSION``
+  and goes cold wholesale on a builder bump.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.store import (
+    AliasStore,
+    ResultStore,
+    ShardedStore,
+    alias_key,
+    canonical_key,
+    open_store,
+)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep * bool(env.get("PYTHONPATH")) + env.get(
+        "PYTHONPATH", ""
+    )
+    return env
+
+
+# --------------------------------------------------------------------------- #
+# open_store dispatch
+
+
+def test_open_store_dispatch(tmp_path):
+    # fresh path with .jsonl suffix -> single file
+    s = open_store(tmp_path / "a.jsonl")
+    assert type(s) is ResultStore
+    # fresh suffix-less path -> sharded directory
+    s = open_store(tmp_path / "a_dir")
+    assert isinstance(s, ShardedStore)
+    # existing artifacts win over the suffix heuristic
+    (tmp_path / "odd.ext").write_text("")
+    assert type(open_store(tmp_path / "odd.ext")) is ResultStore
+    (tmp_path / "dir.jsonl").mkdir()
+    assert isinstance(open_store(tmp_path / "dir.jsonl"), ShardedStore)
+    # explicit backend overrides the heuristic; unknown names fail loudly
+    assert isinstance(open_store(tmp_path / "b.jsonl", backend="sharded"), ShardedStore)
+    with pytest.raises(ValueError, match="unknown store backend"):
+        open_store(tmp_path / "c", backend="parquet")
+
+
+def test_backends_are_interchangeable_views(tmp_path):
+    """The same records through either backend produce identical reads."""
+    recs = {canonical_key(k=i): {"x": float(i)} for i in range(8)}
+    flat, shard = ResultStore(tmp_path / "f.jsonl"), ShardedStore(tmp_path / "d")
+    for key, payload in recs.items():
+        flat.put(key, payload, machine="V100", builder_version=3)
+        shard.put(key, payload, machine="V100", builder_version=3)
+    for store in (ResultStore(tmp_path / "f.jsonl"), ShardedStore(tmp_path / "d")):
+        assert len(store) == len(recs)
+        assert {k: store.get(k) for k in store.keys()} == recs
+        assert store.machines() == {"V100": len(recs)}
+        assert store.builder_versions() == {3: len(recs)}
+
+
+# --------------------------------------------------------------------------- #
+# torn-write accounting (lazy scan must validate closure, not just keys)
+
+
+def test_lazy_len_and_keys_exclude_torn_lines(tmp_path):
+    """A killed writer can leave a line whose key parses but whose payload is
+    cut short.  The lazy key scan must not count it — ``len()``/``keys()``
+    agree with what ``get()`` can actually serve, *without* materializing."""
+    p = tmp_path / "r.jsonl"
+    s = ResultStore(p)
+    s.put("a", {"v": 1})
+    s.put("b", {"v": 2})
+    with p.open("a") as f:
+        # complete key, torn payload: the pre-fix scanner counted all of these
+        f.write('{"key": "c", "payload": {"x": 1\n')
+        f.write('{"key": "d", "payload": {"s": "un')  # torn inside a string
+    s2 = ResultStore(p)
+    assert len(s2) == 2
+    assert set(s2.keys()) == {"a", "b"}
+    assert "c" not in s2 and "d" not in s2
+    assert s2.get("a") == {"v": 1} and s2.get("b") == {"v": 2}
+
+
+def test_torn_line_followed_by_good_writer_recovers_the_good_line(tmp_path):
+    """Sharded layout: one writer dies mid-append, another keeps going in its
+    own segment — the survivor's records load fine."""
+    d = tmp_path / "store"
+    w1 = ShardedStore(d, writer_id="w1")
+    w1.put("a", {"v": 1})
+    with w1.segment_path.open("a") as f:
+        f.write('{"key": "torn", "payload": {"x": ')
+    w2 = ShardedStore(d, writer_id="w2")
+    w2.put("b", {"v": 2})
+    fresh = ShardedStore(d, writer_id="reader")
+    assert len(fresh) == 2 and set(fresh.keys()) == {"a", "b"}
+
+
+# --------------------------------------------------------------------------- #
+# concurrent writers
+
+
+_WRITER = """
+import sys
+from repro.store import ShardedStore, ResultStore, canonical_key
+
+cls = ShardedStore if sys.argv[2] == "sharded" else ResultStore
+kw = {"writer_id": sys.argv[3]} if sys.argv[2] == "sharded" else {}
+store = cls(sys.argv[1], **kw)
+who, n = sys.argv[3], int(sys.argv[4])
+for i in range(n):
+    store.put(canonical_key(w=who, i=i), {"writer": who, "i": i})
+print("done", who)
+"""
+
+
+def _run_writers(path, backend, n_per_writer):
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", _WRITER, str(path), backend, who, str(n_per_writer)],
+            env=_env(),
+            stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE,
+        )
+        for who in ("alpha", "beta")
+    ]
+    for p in procs:
+        out, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()
+
+
+def test_sharded_store_two_concurrent_writers_lose_no_records(tmp_path):
+    """THE multi-writer regression test: two processes, one store directory,
+    400 interleaved appends — every record must survive."""
+    d = tmp_path / "store"
+    n = 200
+    _run_writers(d, "sharded", n)
+    store = ShardedStore(d, writer_id="reader")
+    assert len(store) == 2 * n
+    for who in ("alpha", "beta"):
+        for i in range(n):
+            assert store.get(canonical_key(w=who, i=i)) == {"writer": who, "i": i}
+    # two writers -> two segments (reader hasn't appended)
+    segs = store.segments()
+    assert set(segs) == {"segment-alpha.jsonl", "segment-beta.jsonl"}
+    assert all(count == n for count in segs.values())
+
+
+def test_sharded_store_shared_writer_id_still_serializes(tmp_path):
+    """A reused writer id degrades to one shared segment; the per-append flock
+    still keeps every line whole."""
+    d = tmp_path / "store"
+
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", _WRITER, str(d), "sharded", "same", "120"],
+            env=_env(),
+            stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE,
+        )
+        for _ in range(2)
+    ]
+    for p in procs:
+        out, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()
+    store = ShardedStore(d, writer_id="reader")
+    # both wrote the same 120 keys (same payloads): last write wins -> 120 live
+    assert len(store) == 120
+    assert store.segments() == {"segment-same.jsonl": 240}
+
+
+def test_single_file_concurrent_writers_documented_behavior(tmp_path):
+    """Documentation, not endorsement: ``ResultStore`` appends are single
+    buffered writes with no cross-process coordination.  Every line that
+    reaches disk *complete* is served and torn tails are skipped — but nothing
+    prevents two writers interleaving partial lines under memory pressure, so
+    concurrent multi-writer workloads belong on ``ShardedStore`` (which this
+    suite proves lossless above)."""
+    p = tmp_path / "shared.jsonl"
+    _run_writers(p, "jsonl", 60)
+    store = ResultStore(p)
+    # closed lines parse; anything torn by interleaving would be skipped, so
+    # the live count can never EXCEED what the writers wrote
+    assert len(store) <= 120
+    for key in store.keys():
+        assert store.get(key) is not None
+
+
+# --------------------------------------------------------------------------- #
+# sharded compaction
+
+
+def test_sharded_compact_folds_segments_and_preserves_records(tmp_path):
+    d = tmp_path / "store"
+    w1 = ShardedStore(d, writer_id="w1")
+    w2 = ShardedStore(d, writer_id="w2")
+    w1.put("a", {"v": 1})
+    w2.put("a", {"v": 2})  # supersedes across segments (name-sorted replay)
+    w2.put("b", {"v": 3})
+    w1.compact()
+    assert (d / "compacted.jsonl").exists()
+    assert set(ShardedStore(d).segments()) == {"compacted.jsonl"}
+    fresh = ShardedStore(d, writer_id="w3")
+    assert len(fresh) == 2
+    assert fresh.get("a") == {"v": 2} and fresh.get("b") == {"v": 3}
+    # appends after compaction land in a fresh segment and replay on top
+    fresh.put("a", {"v": 9})
+    assert ShardedStore(d).get("a") == {"v": 9}
+
+
+def test_sharded_compact_spares_segments_written_mid_compaction(tmp_path):
+    """A segment that appears between layer capture and unlink must survive
+    (writers don't take the compaction lock)."""
+    d = tmp_path / "store"
+    w = ShardedStore(d, writer_id="w")
+    w.put("a", {"v": 1})
+
+    class RacingStore(ShardedStore):
+        def _live_record_lines(self):
+            # a new writer lands a record while compaction is folding
+            late = ShardedStore(d, writer_id="late")
+            late.put("z", {"v": 26})
+            yield from super()._live_record_lines()
+
+    RacingStore(d, writer_id="w").compact()
+    survivors = ShardedStore(d, writer_id="reader")
+    assert survivors.get("a") == {"v": 1} and survivors.get("z") == {"v": 26}
+    assert "segment-late.jsonl" in survivors.segments()
+
+
+# --------------------------------------------------------------------------- #
+# alias layer
+
+
+def test_alias_store_roundtrip_and_builder_bump(tmp_path, monkeypatch):
+    from repro.frontend import ir as ir_mod
+
+    a = AliasStore(tmp_path / "alias.jsonl")
+    key = alias_key("stencil25", "gpu", {"block": (32, 8, 4)})
+    assert a.get(key) is None
+    a.put(key, "f" * 64)
+    assert a.get(key) == "f" * 64
+    assert AliasStore(tmp_path / "alias.jsonl").get(key) == "f" * 64  # durable
+    # wholesale invalidation: a builder bump makes every entry read as a miss
+    monkeypatch.setattr(ir_mod, "BUILDER_VERSION", ir_mod.BUILDER_VERSION + 1)
+    assert a.get(key) is None
+    # re-recording under the new version repopulates; compact() drops the
+    # stale generation from disk
+    a.put(key, "e" * 64)
+    assert a.get(key) == "e" * 64
+    a.compact()
+    lines = [json.loads(x) for x in (tmp_path / "alias.jsonl").read_text().splitlines()]
+    assert len(lines) == 1 and lines[0]["fp"] == "e" * 64
+
+
+def test_alias_key_is_spelling_sensitive_by_design(tmp_path):
+    """The alias keys the *config identity*, not the IR: respelled configs
+    (list vs tuple blocks) miss the alias and fall back to tracing, which
+    still converges on one store entry via the fingerprint."""
+    k1 = alias_key("stencil25", "gpu", {"block": (32, 8, 4)})
+    k2 = alias_key("stencil25", "gpu", {"block": [32, 8, 4]})
+    k3 = alias_key("stencil25", "gpu", {"block": (32, 8, 5)})
+    assert k1 == k2  # canonical_key folds list/tuple
+    assert k1 != k3

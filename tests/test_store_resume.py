@@ -1,6 +1,6 @@
-"""Resume-path coverage for the persistent sweep store (explore/store.py).
+"""Resume-path coverage for the persistent sweep store (repro.store).
 
-The store's contract with the engine: an interrupted sweep loses at most the
+The store's contract with the Study: an interrupted sweep loses at most the
 record being written; a re-run pays only for what is missing; cache identity
 is the full (kernel, config, machine, method, fits) key — so changing ONLY the
 machine must miss; and files written before the schema gained the ``machine``
@@ -12,8 +12,12 @@ import json
 
 from repro.core import appspec
 from repro.core.machine import A100_40GB, V100
-from repro.explore import sweep
+from repro.explore import Study
 from repro.explore.store import ResultStore
+
+
+def sweep(kernel, configs=None, machine=None, store=None):
+    return Study(kernel, configs=configs, machine=machine, store=store).result()
 
 GRID = (128, 64, 64)  # reduced grid keeps each full estimate cheap
 
@@ -61,7 +65,7 @@ def test_cache_miss_when_only_machine_changes(tmp_path):
     assert s.machines() == {V100.name: 1, A100_40GB.name: 1}
 
 
-def test_engine_skips_corrupt_trailing_line_and_rewrites_it(tmp_path):
+def test_study_skips_corrupt_trailing_line_and_rewrites_it(tmp_path):
     p = tmp_path / "sweep.jsonl"
     sweep(build_small, configs=CFGS[:2], machine=V100, store=p)
     with p.open("a") as f:

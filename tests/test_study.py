@@ -2,8 +2,9 @@
 
 Covers the API-redesign contracts:
 
-* ``Study`` subsumes ``sweep``/``compare`` (which remain as deprecation shims
-  producing identical results);
+* ``Study`` is THE entry point (the legacy ``sweep``/``compare`` shims are
+  gone) and is deterministic: two identical studies produce bit-identical
+  results;
 * multi-machine ``Study.run()`` evaluates the machine-independent per-config
   work ONCE (IR tracing counted via a wrapped builder, footprints via the
   shared ``EstimateCache`` hit counters) and is bit-identical to N independent
@@ -22,8 +23,7 @@ import pytest
 from repro.core import appspec
 from repro.core.machine import A100_40GB, TPU_V5E, TPU_V6E, V100
 from repro.core.record import record_from_payload, record_payload
-from repro.explore import Study, sweep
-from repro.explore.crossmachine import compare
+from repro.explore import Study
 from repro.explore.study import SweepRecord, sort_records
 from repro.frontend import ir as ir_mod
 
@@ -66,23 +66,32 @@ def _tpu_cfgs():
 
 
 # --------------------------------------------------------------------------- #
-# facade vs shims
+# facade determinism (the old sweep/compare shims are gone — same surface,
+# one entry point)
 
 
-def test_study_single_machine_equals_sweep():
+def test_legacy_shims_are_gone():
+    import repro.explore as explore
+
+    assert not hasattr(explore, "sweep") and not hasattr(explore, "compare")
+    with pytest.raises(ModuleNotFoundError):
+        import repro.explore.engine  # noqa: F401
+    with pytest.raises(ModuleNotFoundError):
+        import repro.explore.crossmachine  # noqa: F401
+
+
+def test_study_single_machine_is_deterministic():
     res = Study(build_small, configs=CFGS, machine=V100).result()
-    with pytest.warns(DeprecationWarning):
-        old = sweep(build_small, configs=CFGS, machine=V100)
-    assert [r.config for r in res.records] == [r.config for r in old.records]
-    assert [r.metrics for r in res.records] == [r.metrics for r in old.records]
+    again = Study(build_small, configs=CFGS, machine=V100).result()
+    assert [r.config for r in res.records] == [r.config for r in again.records]
+    assert [r.metrics for r in res.records] == [r.metrics for r in again.records]
     assert res.backend == "gpu" and res.machine == V100.name
 
 
-def test_compare_shim_matches_study():
+def test_study_compare_is_deterministic():
     study = Study("stencil25", configs=CFGS, machines=["v100", "a100"])
     cm_new = study.compare()
-    with pytest.warns(DeprecationWarning):
-        cm_old = compare("stencil25", ["v100", "a100"], configs=CFGS)
+    cm_old = Study("stencil25", configs=CFGS, machines=["v100", "a100"]).compare()
     assert cm_new.machines == cm_old.machines == ["V100", "A100"]
     assert cm_new.tau == cm_old.tau
     assert [w.placements for w in cm_new.winners] == [
