@@ -531,6 +531,147 @@ def study_multimachine_sharing():
     )
 
 
+def search_convergence():
+    """Budget-aware search convergence -> the ``search`` entry of
+    BENCH_sweep.json.
+
+    Configs-fully-estimated-to-90%-Pareto-recall on the 162-config stencil
+    space, three strategies over identical candidates:
+
+      * exhaustive        — estimate everything in enumeration order (the
+        pre-search engine; recall converges only as the sweep finishes),
+      * halving           — SuccessiveHalving without the screen rung (the
+        memory-only proxy ranks the whole pool),
+      * screened_halving  — the full rung ladder (free screen scores first).
+
+    Plus the wide 2160-config space at budget 64: the fraction of the true
+    front a 3% budget recovers (the CI search-smoke gate replays this).
+    """
+    from repro.explore import Study
+    from repro.explore.registry import stencil25_wide_space
+    from repro.explore.search import (
+        SuccessiveHalving,
+        evaluations_to_recall,
+        pareto_recall,
+        recall_curve,
+    )
+
+    budget = 40
+    truth = Study("stencil25").run().result()
+    front = truth.pareto()
+    # exhaustive estimation order == candidate enumeration order
+    space = Study("stencil25").entry.space()
+    exhaust_order = [cfg for cfg in space]
+    curves = {
+        "exhaustive": recall_curve(exhaust_order, front),
+    }
+    recalls = {"exhaustive": 1.0}
+    for name, search in (
+        ("halving", SuccessiveHalving(budget=budget, screen=False)),
+        ("screened_halving", SuccessiveHalving(budget=budget)),
+    ):
+        res = Study("stencil25").run(search=search)
+        curves[name] = recall_curve(res.search_stats.full_keys, front)
+        recalls[name] = pareto_recall(res.result().records, front)
+    evals90 = {k: evaluations_to_recall(c, 0.9) for k, c in curves.items()}
+
+    wide_budget = 64
+    wide_space = stencil25_wide_space()
+    us_wide, wide = _timed(
+        lambda: Study("stencil25", wide_space).run(
+            search=SuccessiveHalving(budget=wide_budget)
+        )
+    )
+    wide_truth = Study("stencil25", wide_space).run().result()
+    wide_recall = pareto_recall(wide.result().records, wide_truth.pareto())
+    payload = {
+        "search": {
+            "kernel": "stencil25",
+            "budget": budget,
+            "pool": len(exhaust_order),
+            "truth_front": len(front),
+            "evals_to_90pct_recall": evals90,
+            "recall_at_budget": recalls,
+            "wide_pool": len(list(wide_space)),
+            "wide_budget": wide_budget,
+            "wide_recall": wide_recall,
+            "wide_budget_fraction": round(
+                wide.search_stats.full_selected / max(len(list(wide_space)), 1), 4
+            ),
+            "wide_search_s": round(us_wide / 1e6, 3),
+        }
+    }
+    _update_bench(payload)
+    derived = (
+        f"evals90[exhaustive={evals90['exhaustive']} "
+        f"halving={evals90['halving']} screened={evals90['screened_halving']}] "
+        f"wide_recall={wide_recall:.2f}@{wide_budget}/{payload['search']['wide_pool']}"
+    )
+    return "search_convergence", us_wide, derived
+
+
+def batched_oracle_throughput():
+    """Vectorized-oracle throughput -> ``enum_cfg_per_s`` / ``machine_batched``
+    entries of BENCH_sweep.json.
+
+    * enum path: the §III.D.1 enumeration method through the vectorized
+      ``line_sets_batched`` fast path (one NumPy evaluation per access group)
+      vs the per-config reference ``estimate`` loop — bit-identical sets.
+    * machine batching: ``estimate_batch_machines`` over V100+A100+H100 vs
+      three sequential ``estimate_batch`` calls with cold caches — the wave
+      geometry shared across machines is the saving.
+    """
+    from repro.core import appspec, estimator
+    from repro.core.estimator import EstimateCache, GPUAnalyticEstimator
+    from repro.core.machine import A100_40GB as A100, H100_SXM as H100, V100
+
+    cfgs = appspec.stencil_config_space()[:48]
+    irs = [appspec.star3d_ir(block=c["block"], fold=c["fold"]) for c in cfgs]
+    specs = [appspec.star3d(block=c["block"], fold=c["fold"]) for c in cfgs]
+
+    oracle = GPUAnalyticEstimator(method="enum")
+    us_ref, _ = _timed(
+        lambda: [estimator.estimate(s, V100, method="enum") for s in specs]
+    )
+    us_vec, _ = _timed(
+        lambda: oracle.estimate_batch(irs, V100, cache=EstimateCache(), specs=specs)
+    )
+    machines = [V100, A100, H100]
+    sym = GPUAnalyticEstimator(method="sym")
+    us_seq, _ = _timed(
+        lambda: [
+            sym.estimate_batch(irs, m, cache=EstimateCache(), specs=specs)
+            for m in machines
+        ]
+    )
+    us_fused, _ = _timed(
+        lambda: sym.estimate_batch_machines(
+            irs, machines, cache=EstimateCache(), specs=specs
+        )
+    )
+    n = len(cfgs)
+    payload = {
+        "enum_cfg_per_s": n / (us_vec / 1e6),
+        "enum_ref_cfg_per_s": n / (us_ref / 1e6),
+        "enum_vectorized_speedup": us_ref / max(us_vec, 1e-9),
+        "machine_batched": {
+            "machines": [m.name for m in machines],
+            "configs": n,
+            "sequential_s": round(us_seq / 1e6, 3),
+            "fused_s": round(us_fused / 1e6, 3),
+            "saving": round(us_seq / max(us_fused, 1e-9), 2),
+        },
+    }
+    _update_bench(payload)
+    derived = (
+        f"enum={payload['enum_cfg_per_s']:.0f}cfg/s "
+        f"({payload['enum_vectorized_speedup']:.1f}x ref) "
+        f"machine_batch={payload['machine_batched']['saving']:.2f}x over "
+        f"{len(machines)} machines"
+    )
+    return "batched_oracle_throughput", us_vec, derived
+
+
 def dryrun_roofline_summary():
     t0 = time.perf_counter()
     cells = []
@@ -574,6 +715,8 @@ BENCHES = [
     service_throughput,
     crossmachine_ranking_shift,
     study_multimachine_sharing,
+    search_convergence,
+    batched_oracle_throughput,
     dryrun_roofline_summary,
 ]
 

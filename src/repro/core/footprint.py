@@ -48,6 +48,58 @@ def line_sets(
     }
 
 
+def line_sets_batched(
+    accesses: Sequence[Access],
+    boxes: Sequence[ThreadBox],
+    granularity: int,
+    stores: bool | None = None,
+    groups: Mapping[str, list] | None = None,
+) -> dict[str, np.ndarray]:
+    """Bit-identical :func:`line_sets` via batched address-matrix construction.
+
+    Instead of one meshgrid + address evaluation per access, accesses sharing
+    ``(field, coeffs)`` (a :func:`repro.core.symset.group_accesses` group —
+    e.g. all 25 taps of a stencil) evaluate as ONE broadcast per box: the
+    linear part ``cx*tx + cy*ty + cz*tz`` is built once, deduplicated, and the
+    group's offsets broadcast against it.  Deduplicating the linear part first
+    changes the address *multiset* but never the address *set*, and the final
+    per-field ``np.unique`` is multiplicity- and order-insensitive — so the
+    returned sorted line arrays equal the reference's exactly.
+
+    ``groups``, when given, must come from ``group_accesses(accesses, stores)``
+    with the same ``stores`` kind (the grouping already applied the filter).
+    """
+    from . import symset
+
+    if groups is None:
+        groups = symset.group_accesses(accesses, stores)
+    out: dict[str, np.ndarray] = {}
+    for name, group_list in groups.items():
+        chunks: list[np.ndarray] = []
+        for access, offsets in group_list:
+            cx, cy, cz = access.coeffs
+            es = access.field.element_size
+            al = access.field.alignment
+            for box in boxes:
+                if box.count <= 0:
+                    continue
+                xs = np.arange(box.x[0], box.x[1], dtype=np.int64)
+                ys = np.arange(box.y[0], box.y[1], dtype=np.int64)
+                zs = np.arange(box.z[0], box.z[1], dtype=np.int64)
+                base = np.unique(
+                    (
+                        cx * xs[:, None, None]
+                        + cy * ys[None, :, None]
+                        + cz * zs[None, None, :]
+                    ).ravel()
+                )
+                lines = (al + (offsets[:, None] + base[None, :]) * es) // granularity
+                chunks.append(np.unique(lines.ravel()))
+        if chunks:
+            out[name] = np.unique(np.concatenate(chunks))
+    return out
+
+
 def footprint_bytes(
     accesses: Sequence[Access],
     boxes: Sequence[ThreadBox],

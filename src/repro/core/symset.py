@@ -230,19 +230,36 @@ def _merge_scalar_runs(los: list[int], his_incl: list[int]) -> list[tuple[int, i
     return out
 
 
-def _group_intervals(
-    access: Access, offsets: np.ndarray, box: ThreadBox, granularity: int
+def _group_x_runs(
+    access: Access, offsets: np.ndarray, x0: int, x1: int
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Raw intervals of a whole access group over one box (vectorized
-    :func:`_access_intervals` across the group's offsets).
+    """Merged per-row byte runs of a unit-stride group, relative to row base.
 
-    For the unit-stride case the per-offset byte runs of one lattice row are
-    merged *symbolically first* (union in byte space — the line set of a union
-    equals the union of line sets, so the final merged :class:`IntervalSet` is
-    unchanged): a group of 25 stencil offsets typically collapses to a handful
-    of runs per row, shrinking the raw interval count the O(n log n) merge
-    sees by a factor of the group size.
+    Depends only on the group and the box's x extent — shared across every box
+    (and machine wave) with the same x range, which is what lets the multi-
+    request evaluator batch rows across boxes.
     """
+    cx = access.coeffs[0]
+    es = access.field.element_size
+    if cx >= 0:
+        rel_lo, rel_hi = cx * x0 * es, cx * (x1 - 1) * es + (es - 1)
+    else:
+        rel_lo, rel_hi = cx * (x1 - 1) * es, cx * x0 * es + (es - 1)
+    offs = offsets * es
+    runs = _merge_scalar_runs(
+        [int(o) + rel_lo for o in offs], [int(o) + rel_hi for o in offs]
+    )
+    run_lo = np.asarray([r[0] for r in runs], dtype=np.int64)
+    run_hi = np.asarray([r[1] for r in runs], dtype=np.int64)
+    return run_lo, run_hi
+
+
+def _group_byte_intervals(
+    access: Access, offsets: np.ndarray, box: ThreadBox
+) -> tuple[np.ndarray, np.ndarray]:
+    """Raw closed *byte* runs (lo, hi inclusive) of a whole access group over
+    one box — granularity-independent, so one evaluation serves every sector
+    and line size that needs this (group, box)."""
     (x0, x1), (y0, y1), (z0, z1) = box.x, box.y, box.z
     if x1 <= x0 or y1 <= y0 or z1 <= z0:
         z = np.empty((0,), dtype=np.int64)
@@ -253,21 +270,11 @@ def _group_intervals(
     zs = np.arange(z0, z1, dtype=np.int64)
     inner = (cy * ys[:, None] + cz * zs[None, :]).ravel() * es
     if abs(cx) == 1:
-        # per-row byte run of one offset, relative to the row base
-        if cx >= 0:
-            rel_lo, rel_hi = cx * x0 * es, cx * (x1 - 1) * es + (es - 1)
-        else:
-            rel_lo, rel_hi = cx * (x1 - 1) * es, cx * x0 * es + (es - 1)
-        offs = offsets * es
-        runs = _merge_scalar_runs(
-            [int(o) + rel_lo for o in offs], [int(o) + rel_hi for o in offs]
-        )
-        run_lo = np.asarray([r[0] for r in runs], dtype=np.int64)
-        run_hi = np.asarray([r[1] for r in runs], dtype=np.int64)
+        run_lo, run_hi = _group_x_runs(access, offsets, x0, x1)
         base = access.field.alignment + inner
         lo = (base[:, None] + run_lo[None, :]).ravel()
         hi_incl = (base[:, None] + run_hi[None, :]).ravel()
-        return lo // granularity, hi_incl // granularity + 1
+        return lo, hi_incl
     # strided x: merge the group's offset runs in byte space first, then either
     # collapse the x dimension symbolically (when the merged run is at least as
     # wide as the x stride, consecutive x steps tile a contiguous range — the
@@ -298,7 +305,26 @@ def _group_intervals(
             his.append((shifted + hi).ravel())
     lo_all = np.concatenate(los)
     hi_all = np.concatenate(his)
-    return lo_all // granularity, hi_all // granularity + 1
+    return lo_all, hi_all
+
+
+def _group_intervals(
+    access: Access, offsets: np.ndarray, box: ThreadBox, granularity: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Raw intervals of a whole access group over one box (vectorized
+    :func:`_access_intervals` across the group's offsets).
+
+    For the unit-stride case the per-offset byte runs of one lattice row are
+    merged *symbolically first* (union in byte space — the line set of a union
+    equals the union of line sets, so the final merged :class:`IntervalSet` is
+    unchanged): a group of 25 stencil offsets typically collapses to a handful
+    of runs per row, shrinking the raw interval count the O(n log n) merge
+    sees by a factor of the group size.
+    """
+    lo, hi_incl = _group_byte_intervals(access, offsets, box)
+    if not lo.size:
+        return lo, hi_incl
+    return lo // granularity, hi_incl // granularity + 1
 
 
 def field_interval_sets_grouped(
@@ -324,6 +350,96 @@ def field_interval_sets_grouped(
         ends = np.concatenate([c[1] for c in chunks])
         out[name] = IntervalSet(starts, ends)
     return out
+
+
+def field_interval_sets_grouped_multi(
+    groups: Mapping[str, list[tuple[Access, np.ndarray]]],
+    requests: Sequence[tuple[Sequence[ThreadBox], int]],
+) -> list[dict[str, IntervalSet]]:
+    """Evaluate MANY ``(boxes, granularity)`` footprint requests in one pass.
+
+    The machine-batched wave-geometry primitive: a multi-machine study asks
+    for the same kernel's wave footprints under several machines, whose waves
+    differ only in box geometry (SM count) and sector/line size.  Two sharing
+    levels make the joint evaluation cheaper than independent calls:
+
+    * byte-space raw intervals are granularity-independent, so each unique
+      ``(group, box)`` pair evaluates once no matter how many sector/line
+      sizes ask for it;
+    * unit-stride groups bucket unique boxes by x extent: the per-row run
+      set depends only on (group, x range), so all boxes in a bucket share
+      one run computation and one concatenated broadcast
+      ``base[:, None] + run[None, :]`` over their stacked lattice rows.
+
+    Returns one per-field dict per request, each canonically identical to
+    ``field_interval_sets_grouped(groups, boxes, granularity)`` — the merged
+    :class:`IntervalSet` is the unique minimal sorted representation, so the
+    evaluation batching is invisible downstream (bit-identical estimates).
+    """
+    results: list[dict[str, IntervalSet]] = [dict() for _ in requests]
+    # unique non-empty boxes across all requests, in first-seen order
+    box_key = lambda b: (b.x, b.y, b.z)  # noqa: E731
+    uniq_boxes: dict[tuple, ThreadBox] = {}
+    for boxes, _ in requests:
+        for b in boxes:
+            if b.count > 0:
+                uniq_boxes.setdefault(box_key(b), b)
+    per_req_chunks: list[dict[str, list[tuple[np.ndarray, np.ndarray]]]] = [
+        {} for _ in requests
+    ]
+    for name, group_list in groups.items():
+        for access, offsets in group_list:
+            # byte-space (lo, hi_incl) per unique box for this group
+            byte_ivs: dict[tuple, tuple[np.ndarray, np.ndarray]] = {}
+            if abs(access.coeffs[0]) == 1:
+                # bucket by x extent; one run set + one broadcast per bucket
+                buckets: dict[tuple, list[tuple] ] = {}
+                for bk, box in uniq_boxes.items():
+                    buckets.setdefault((box.x[0], box.x[1]), []).append(bk)
+                cy, cz = access.coeffs[1], access.coeffs[2]
+                es = access.field.element_size
+                al = access.field.alignment
+                for (x0, x1), bkeys in buckets.items():
+                    if x1 <= x0:
+                        continue
+                    run_lo, run_hi = _group_x_runs(access, offsets, x0, x1)
+                    bases, spans = [], []
+                    for bk in bkeys:
+                        box = uniq_boxes[bk]
+                        ys = np.arange(box.y[0], box.y[1], dtype=np.int64)
+                        zs = np.arange(box.z[0], box.z[1], dtype=np.int64)
+                        bases.append(
+                            al + (cy * ys[:, None] + cz * zs[None, :]).ravel() * es
+                        )
+                        spans.append(bases[-1].size)
+                    base_cat = np.concatenate(bases)
+                    lo_cat = (base_cat[:, None] + run_lo[None, :]).ravel()
+                    hi_cat = (base_cat[:, None] + run_hi[None, :]).ravel()
+                    nruns = run_lo.size
+                    pos = 0
+                    for bk, rows in zip(bkeys, spans):
+                        sl = slice(pos * nruns, (pos + rows) * nruns)
+                        byte_ivs[bk] = (lo_cat[sl], hi_cat[sl])
+                        pos += rows
+            else:
+                for bk, box in uniq_boxes.items():
+                    byte_ivs[bk] = _group_byte_intervals(access, offsets, box)
+            for ri, (boxes, granularity) in enumerate(requests):
+                chunks = per_req_chunks[ri].setdefault(name, [])
+                for b in boxes:
+                    if b.count <= 0:
+                        continue
+                    lo, hi_incl = byte_ivs[box_key(b)]
+                    if lo.size:
+                        chunks.append((lo // granularity, hi_incl // granularity + 1))
+    for ri in range(len(requests)):
+        for name, chunks in per_req_chunks[ri].items():
+            if not chunks:
+                continue
+            starts = np.concatenate([c[0] for c in chunks])
+            ends = np.concatenate([c[1] for c in chunks])
+            results[ri][name] = IntervalSet(starts, ends)
+    return results
 
 
 def footprint_bytes(

@@ -284,6 +284,8 @@ def main(argv: list[str] | None = None) -> int:
         from .serve import serve_main
 
         return serve_main(argv[1:])
+    if argv and argv[0] == "search":
+        return _search_main(argv[1:])
     if argv and argv[0] == "store":
         return _store_main(argv[1:])
     args = _build_parser().parse_args(argv)
@@ -422,6 +424,175 @@ def _run(args, entry, method: str) -> int:
     return 0
 
 
+def _search_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.explore search",
+        description="Budget-aware search: successive halving with the analytic "
+                    "estimator as inner oracle (free screen scores -> memory-only "
+                    "proxy rung -> full estimates -> multi-machine finalists). "
+                    "Records land in the same stores as exhaustive sweeps, so "
+                    "search and sweep resume each other.",
+    )
+    p.add_argument("--kernel", required=True,
+                   help="kernel to search (GPU backend; see `python -m repro.explore --list`)")
+    p.add_argument("--budget", type=int, required=True,
+                   help="max configs fully estimated on the primary machine")
+    p.add_argument("--eta", type=int, default=3,
+                   help="halving factor: the proxy rung sees at most budget*eta^3 "
+                        "configs, the multi-machine rung ceil(budget/eta) finalists")
+    p.add_argument("--wide", action="store_true",
+                   help="search the kernel's wide space (stencil25: 2160 configs) "
+                        "instead of the paper space")
+    p.add_argument("--machine", default=None,
+                   help=f"machine model, case-insensitive (registry: {', '.join(sorted(MACHINES))})")
+    p.add_argument("--machines", default=None, metavar="M1,M2,...",
+                   help="comma-separated machines; the first is the primary "
+                        "(full-estimate) machine, the rest get the finalist rung")
+    p.add_argument("--method", default="sym", choices=("sym", "enum"),
+                   help="footprint method for the full rung")
+    p.add_argument("--proxy-method", default="sym", choices=("sym", "enum"),
+                   help="footprint backend for the proxy rung (sym shares cached "
+                        "sets with the full rung)")
+    p.add_argument("--no-screen", action="store_true",
+                   help="skip the free screen rung (classic halving)")
+    p.add_argument("--no-proxy", action="store_true",
+                   help="skip the memory-only proxy rung")
+    p.add_argument("--sample", type=int, default=None, metavar="N",
+                   help="lazily sample N candidates from the space instead of "
+                        "enumerating it (the entry point for huge spaces)")
+    p.add_argument("--seed", type=int, default=0, help="sampling seed")
+    p.add_argument("--propose", type=int, default=0, metavar="ROUNDS",
+                   help="model-guided local-search rounds perturbing the current "
+                        "best configs (spends part of the budget)")
+    p.add_argument("--top", type=int, default=5, help="print the best K configs")
+    p.add_argument("--store", default=None,
+                   help="result store path (default: the kernel's exhaustive-sweep "
+                        "store, so search and sweep share estimates)")
+    p.add_argument("--no-store", action="store_true", help="disable the persistent cache")
+    p.add_argument("--recall", action="store_true",
+                   help="also sweep the space exhaustively (through the same "
+                        "store) and report the fraction of the true Pareto "
+                        "front the search recovered")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="machine-readable JSON summary instead of tables")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="export a Chrome-trace JSON of the search's rung "
+                        "structure (search.rung spans) to PATH")
+    return p
+
+
+def _search_main(argv: list[str]) -> int:
+    args = _search_parser().parse_args(argv)
+    from .search import LocalSearch, SuccessiveHalving, pareto_recall
+
+    try:
+        entry = get_kernel(args.kernel, backend="gpu")
+    except KeyError as e:
+        return _fail(e)
+    if args.machine and args.machines:
+        return _fail("--machine and --machines are mutually exclusive")
+    space = None
+    if args.wide:
+        if entry.wide_space is None:
+            return _fail(f"kernel {entry.name!r} has no wide search space")
+        space = entry.wide_space()
+
+    try:
+        names = (
+            [canonical_machine_name(m) for m in args.machines.split(",") if m]
+            if args.machines
+            else [canonical_machine_name(args.machine or entry.default_machine)]
+        )
+    except KeyError as e:
+        return _fail(e)
+    method = args.method
+    stores = None
+    if not args.no_store:
+        if args.store:
+            if len(names) > 1:
+                return _fail(
+                    "--store names ONE store; --machines keeps one per machine "
+                    "(use --no-store to disable caching)"
+                )
+            stores = {names[0]: open_store(args.store)}
+        else:
+            stores = default_stores(entry.name, names, method)
+    if args.trace:
+        obs_trace.enable()
+    try:
+        study = Study(
+            entry.name, space, machines=names, method=method, stores=stores
+        )
+        search = SuccessiveHalving(
+            budget=args.budget,
+            eta=args.eta,
+            screen=not args.no_screen,
+            proxy=not args.no_proxy,
+            proxy_method=args.proxy_method,
+            sample=args.sample,
+            seed=args.seed,
+            proposer=LocalSearch(rounds=args.propose) if args.propose else None,
+            multi_machine=len(names) > 1,
+        )
+        try:
+            result = study.run(search=search)
+            recall = None
+            if args.recall:
+                truth = Study(
+                    entry.name, space, machines=names, method=method, stores=stores
+                ).run()
+                recall = pareto_recall(
+                    result.result(names[0]).records,
+                    truth.result(names[0]).pareto(),
+                )
+        except (ValueError, KeyError) as e:
+            return _fail(e)
+    finally:
+        if args.trace:
+            _export_trace(args.trace)
+
+    res = result.result(names[0])
+    stats = result.search_stats
+    if args.as_json:
+        out = _summary(res, args.top)
+        out["search"] = stats.summary()
+        if recall is not None:
+            out["pareto_recall"] = recall
+        if len(names) > 1:
+            out["finalists"] = {
+                label: [
+                    {"config": r.config, "metrics": r.metrics}
+                    for r in result.result(label).records
+                ]
+                for label in names[1:]
+            }
+        print(json.dumps(out, indent=2, default=list))
+        return 0
+    print(f"searching {res.kernel} on {res.machine} (method={res.method}): "
+          f"budget {stats.budget}, eta {stats.eta}")
+    print(f"pool {stats.pool} -> screen kept {stats.pool - stats.screened_out} "
+          f"-> proxy ranked {stats.proxy_evaluated} -> full estimated "
+          f"{stats.full_selected} ({stats.full_cache_hits} store hits)")
+    if stats.proposed:
+        print(f"proposer: {stats.proposed} proposed, {stats.promoted} promoted")
+    print("rungs: " + ", ".join(
+        f"{r['rung']}({r.get('evaluated', r.get('proposed', '?'))})"
+        for r in stats.rungs
+    ))
+    if recall is not None:
+        frac = stats.full_selected / max(stats.pool, 1)
+        print(f"pareto recall vs exhaustive truth: {recall:.3f} "
+              f"(fully estimated {stats.full_selected}/{stats.pool} configs "
+              f"= {100 * frac:.1f}%)")
+    print()
+    _print_gpu_rows(res.top(args.top))
+    for label in names[1:]:
+        other = result.result(label)
+        print(f"\nfinalists on {label} ({len(other.records)} configs):")
+        _print_gpu_rows(other.records[: args.top])
+    return 0
+
+
 def _store_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.explore store",
@@ -437,6 +608,9 @@ def _store_parser() -> argparse.ArgumentParser:
              "writer segment into compacted.jsonl under the directory lock)",
     )
     comp.add_argument("path", help="store path (.jsonl file or sharded directory)")
+    comp.add_argument("--ttl", type=float, default=None, metavar="SECONDS",
+                      help="expire records older than SECONDS while folding "
+                           "(records without a timestamp count as infinitely old)")
     return p
 
 
@@ -450,8 +624,10 @@ def _store_main(argv: list[str]) -> int:
     if args.cmd == "compact":
         before = len(store)
         segs = store.segments() if hasattr(store, "segments") else None
-        store.compact()
+        store.compact(ttl_s=args.ttl)
         line = f"compacted {args.path} [{kind}]: {before} live entries"
+        if args.ttl is not None:
+            line += f" -> {len(store)} after --ttl {args.ttl:g}"
         if segs is not None:
             line += f" (folded {len(segs)} layer(s) into compacted.jsonl)"
         print(line)

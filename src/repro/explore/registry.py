@@ -103,6 +103,39 @@ def stencil25_space() -> SearchSpace:
     return _block_fold_space(1024, 64, [(1, 1, 1), (1, 2, 1), (1, 1, 2)])
 
 
+def stencil25_wide_space() -> SearchSpace:
+    """2160 configs: the *wide* stencil space for search smoke tests and benches.
+
+    Relaxes the paper's fixed 1024-thread constraint to {128, 256, 512, 1024}
+    (180 pow2 block shapes) and widens folding to 12 variants.  Too large to
+    sweep exhaustively in CI — the point: :class:`~repro.explore.search.
+    SuccessiveHalving` must find the good region on a budget.
+    """
+    folds = (
+        (1, 1, 1), (1, 2, 1), (1, 1, 2), (1, 2, 2),
+        (1, 4, 1), (1, 1, 4), (1, 4, 2), (1, 2, 4),
+        (2, 1, 1), (2, 2, 1), (2, 1, 2), (1, 4, 4),
+    )
+    return SearchSpace(
+        axes=(
+            pow2("bx", 1, 512),
+            pow2("by", 1, 512),
+            pow2("bz", 1, 64),
+            choice("fold", folds),
+        ),
+        constraints=(
+            predicate(
+                "block volume not in {128, 256, 512, 1024}",
+                lambda c: c["bx"] * c["by"] * c["bz"] in (128, 256, 512, 1024),
+            ),
+        ),
+        assemble=lambda raw: {
+            "block": (raw["bx"], raw["by"], raw["bz"]),
+            "fold": raw["fold"],
+        },
+    )
+
+
 def lbm_d3q15_space() -> SearchSpace:
     """49 configs: pow2 block shapes at 512 threads (register limited), no folding."""
     return _block_fold_space(512, 64, [(1, 1, 1)])
@@ -183,6 +216,7 @@ class KernelEntry:
     describe: str
     build_ir: Callable[..., object] | None = None  # gpu: (**cfg) -> AccessIR
     space: Callable[[], SearchSpace] | None = None  # gpu: default search space
+    wide_space: Callable[[], SearchSpace] | None = None  # gpu: search-scale space
     tpu_configs: Callable[[], list] | None = None  # tpu: PallasConfig list
     default_machine: str = "V100"
 
@@ -208,6 +242,7 @@ KERNELS: dict[str, KernelEntry] = {
         describe="range-4 3D25pt star stencil, V100 (paper §IV.C / Fig 17)",
         build_ir=appspec.star3d_ir,
         space=stencil25_space,
+        wide_space=stencil25_wide_space,
         default_machine="V100",
     ),
     "lbm_d3q15": KernelEntry(

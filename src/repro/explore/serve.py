@@ -102,10 +102,16 @@ class EstimationService:
         root: str = "results/explore",
         store_backend: str | None = None,
         load_workers: int | None = None,
+        max_age_s: float | None = None,
+        max_records: int | None = None,
     ):
         self.root = Path(root)
         self.store_backend = store_backend
         self.load_workers = load_workers
+        # retention policy for every store the daemon opens: long-lived
+        # services otherwise grow their stores without bound (see ResultStore)
+        self.max_age_s = max_age_s
+        self.max_records = max_records
         self.cache = EstimateCache()
         self.started = time.time()
         self.queries = 0
@@ -145,7 +151,11 @@ class EstimationService:
                         else self.root / f"{stem}.jsonl"
                     )
                 store = open_store(
-                    path, load_workers=self.load_workers, backend=self.store_backend
+                    path,
+                    load_workers=self.load_workers,
+                    backend=self.store_backend,
+                    max_age_s=self.max_age_s,
+                    max_records=self.max_records,
                 )
                 ctx = _MachineCtx(
                     machine=machine,
@@ -501,11 +511,17 @@ def serve(
     root: str = "results/explore",
     store_backend: str | None = None,
     load_workers: int | None = None,
+    max_age_s: float | None = None,
+    max_records: int | None = None,
 ) -> tuple[ThreadingHTTPServer, EstimationService]:
     """Build the server (bound, not yet serving).  ``port=0`` picks a free
     port — read it back from ``server.server_address[1]``."""
     service = EstimationService(
-        root=root, store_backend=store_backend, load_workers=load_workers
+        root=root,
+        store_backend=store_backend,
+        load_workers=load_workers,
+        max_age_s=max_age_s,
+        max_records=max_records,
     )
     server = ThreadingHTTPServer((host, port), _Handler)
     server.daemon_threads = True
@@ -529,10 +545,18 @@ def serve_main(argv: list[str] | None = None) -> int:
                         "from disk, new stores single-file .jsonl)")
     p.add_argument("--load-workers", type=int, default=None,
                    help="store load parallelism (see ResultStore)")
+    p.add_argument("--store-ttl", type=float, default=None, metavar="SECONDS",
+                   help="retention: records older than SECONDS read as misses "
+                        "and are evicted (timestamp-less legacy records count "
+                        "as infinitely old)")
+    p.add_argument("--store-max-records", type=int, default=None, metavar="N",
+                   help="retention: bound each store to its N newest records "
+                        "(oldest evicted first)")
     args = p.parse_args(argv)
     server, service = serve(
         host=args.host, port=args.port, root=args.root,
         store_backend=args.store_backend, load_workers=args.load_workers,
+        max_age_s=args.store_ttl, max_records=args.store_max_records,
     )
     host, port = server.server_address[:2]
     # parseable one-line contract for wrappers/tests: "serving on http://H:P"

@@ -191,6 +191,148 @@ class SearchSpace:
         """Deterministic uniform subsample of the feasible set (order-preserving)."""
         return subsample(self.configs(), n, seed)
 
+    # ---- lazy access (search-scale spaces; no full cross-product built) ---- #
+
+    def decode(self, index: int) -> dict:
+        """Raw ``{axis: value}`` dict at ``index`` of the cross-product.
+
+        Mixed-radix with the last axis fastest — ``decode(i)`` equals the
+        ``i``-th combo of ``itertools.product`` over the axis values, so eager
+        and lazy enumeration agree on ordering.
+        """
+        if not 0 <= index < self.raw_size:
+            raise IndexError(f"raw index {index} out of range [0, {self.raw_size})")
+        raw = {}
+        for axis in reversed(self.axes):
+            index, pos = divmod(index, len(axis.values))
+            raw[axis.name] = axis.values[pos]
+        return {a.name: raw[a.name] for a in self.axes}
+
+    def accept(self, raw: dict) -> dict | None:
+        """Assemble + constraint-check one raw point; the config dict or None.
+
+        The single feasibility gate shared by every enumeration/sampling path,
+        so lazy iteration can never disagree with :meth:`configs` about
+        membership.
+        """
+        cfg = self.assemble(raw) if self.assemble else raw
+        view = {**raw, **cfg} if self.assemble else cfg
+        if all(c(view) for c in self.constraints):
+            return cfg
+        return None
+
+    def iter_random(self, seed: int = 0, with_raw: bool = False) -> Iterator:
+        """Lazily yield every feasible config exactly once, in a seeded
+        pseudo-random order.
+
+        Walks a Feistel permutation of ``range(raw_size)`` — O(1) memory and
+        duplicate-free by construction (a permutation visits each raw index
+        once), so sampling 100 configs from a 10^7 space touches ~100 points
+        plus constraint rejections, never the full cross-product.
+        ``with_raw=True`` yields ``(raw, cfg)`` pairs (the raw axis dict is
+        what :meth:`neighbors` perturbs).
+        """
+        for idx in _FeistelPermutation(self.raw_size, seed):
+            raw = self.decode(idx)
+            cfg = self.accept(raw)
+            if cfg is not None:
+                yield (raw, cfg) if with_raw else cfg
+
+    def sample_lazy(self, n: int, seed: int = 0, with_raw: bool = False) -> list:
+        """First ``n`` feasible configs of :meth:`iter_random` (all, if fewer)."""
+        return list(itertools.islice(self.iter_random(seed, with_raw=with_raw), n))
+
+    def sample_stratified(self, n: int, seed: int = 0, with_raw: bool = False) -> list:
+        """Up to ``n`` feasible configs, one per contiguous stratum of the raw
+        index space.
+
+        Splits ``range(raw_size)`` into ``n`` equal strata and scans each from
+        a seeded offset (wrapping within the stratum), taking the first
+        feasible point.  Guarantees coverage spread across the cross-product —
+        e.g. every block-shape region is represented — where pure random
+        sampling may clump.  Strata whose every point is infeasible contribute
+        nothing.
+        """
+        if n <= 0:
+            return []
+        total = self.raw_size
+        n = min(n, total)
+        rng = np.random.default_rng(seed)
+        out = []
+        bounds = np.linspace(0, total, n + 1).astype(np.int64)
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            width = int(hi - lo)
+            if width <= 0:
+                continue
+            start = int(rng.integers(width))
+            for step in range(width):
+                raw = self.decode(int(lo) + (start + step) % width)
+                cfg = self.accept(raw)
+                if cfg is not None:
+                    out.append((raw, cfg) if with_raw else cfg)
+                    break
+        return out
+
+    def neighbors(self, raw: dict) -> list[dict]:
+        """Feasible raw points one axis-step away from ``raw`` (±1 position
+        per axis) — the perturbation move set for local search over the DSL.
+        Returns raw dicts (pass through :meth:`accept` for the config)."""
+        out = []
+        for axis in self.axes:
+            pos = axis.values.index(raw[axis.name])
+            for p in (pos - 1, pos + 1):
+                if 0 <= p < len(axis.values):
+                    cand = dict(raw)
+                    cand[axis.name] = axis.values[p]
+                    cfg = self.accept(cand)
+                    if cfg is not None:
+                        out.append(cand)
+        return out
+
+
+class _FeistelPermutation:
+    """Seeded permutation of ``range(n)`` with O(1) memory.
+
+    A 4-round balanced Feistel network over the smallest even-bit-width domain
+    covering ``n``, cycle-walking out-of-range outputs back through the
+    network.  Any keyed Feistel round function yields a bijection on the
+    padded domain, and cycle-walking restricts a bijection to a bijection on
+    ``range(n)`` — so iteration is duplicate-free and covers every index.
+    """
+
+    ROUNDS = 4
+
+    def __init__(self, n: int, seed: int = 0):
+        if n <= 0:
+            raise ValueError(f"cannot permute empty range (n={n})")
+        self.n = n
+        self.half_bits = max(1, (n.bit_length() + 1) // 2)
+        self.mask = (1 << self.half_bits) - 1
+        rng = np.random.default_rng(seed)
+        self.keys = [int(k) for k in rng.integers(1 << 62, size=self.ROUNDS)]
+
+    def _round(self, r: int, key: int) -> int:
+        x = (r ^ key) * 0x9E3779B97F4A7C15 & 0xFFFFFFFFFFFFFFFF
+        x ^= x >> 29
+        return x & self.mask
+
+    def _encrypt(self, x: int) -> int:
+        l, r = x >> self.half_bits, x & self.mask
+        for key in self.keys:
+            l, r = r, l ^ self._round(r, key)
+        return (l << self.half_bits) | r
+
+    def __getitem__(self, i: int) -> int:
+        """Image of ``i``: walk the padded-domain cycle until it lands in range."""
+        x = self._encrypt(i)
+        while x >= self.n:
+            x = self._encrypt(x)
+        return x
+
+    def __iter__(self) -> Iterator[int]:
+        for i in range(self.n):
+            yield self[i]
+
 
 def subsample(items: list, n: int, seed: int = 0) -> list:
     """Deterministic order-preserving uniform subsample of any candidate list.

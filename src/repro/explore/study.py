@@ -415,6 +415,9 @@ class StudyResult:
     machines: list[str]  # canonical labels, input order
     results: dict  # label -> SweepResult
     score_metric: str  # "glups" (higher better) | "time_s" (lower better)
+    # set by Study.run(search=...): a repro.explore.search.SearchStats with the
+    # budget accounting and rung ladder of the search that produced this result
+    search_stats: object | None = None
 
     def result(self, machine: str | None = None) -> SweepResult:
         """One machine's SweepResult (the only one, for single-machine studies)."""
@@ -669,6 +672,7 @@ class Study:
         self._cands: list[_Candidate] | None = None
         self._space_report: FilterReport | None = None
         self._result: StudyResult | None = None
+        self._last_search = None  # policy of the last run(search=...), for resume()
 
     # ---- public API ------------------------------------------------------- #
 
@@ -676,9 +680,30 @@ class Study:
     def machines(self) -> list[str]:
         return [label for label, _ in self._machines]
 
-    def run(self) -> StudyResult:
+    def run(self, search=None) -> StudyResult:
         """Execute the study: estimate every (config, machine) pair, serving
-        previously stored pairs from the persistent store."""
+        previously stored pairs from the persistent store.
+
+        ``search=`` switches from the exhaustive sweep to the budget-aware
+        ladder of :mod:`repro.explore.search`: pass a
+        :class:`~repro.explore.search.SuccessiveHalving` policy (or a bare int
+        budget).  The search estimates at most ``budget`` configs at full
+        fidelity on the primary machine — through the same store keys and
+        estimation pipeline, so searched records are bit-identical to an
+        exhaustive run's and either path warms the other.
+        """
+        if search is not None:
+            if self.backend != "gpu":
+                raise ValueError(
+                    "search= rides on the GPU analytic estimator's cheap "
+                    "models; TPU studies enumerate explicit config lists"
+                )
+            from .search.driver import run_search
+
+            self._last_search = search
+            self._result = run_search(self, search)
+            return self._result
+        self._last_search = None
         cands = self._candidates()
         results = {
             label: self._run_machine(label, machine, cands)
@@ -712,7 +737,7 @@ class Study:
             return s  # custom store protocol object: nothing to reload
 
         self._stores = {label: reopen(s) for label, s in self._stores.items()}
-        return self.run()
+        return self.run(search=getattr(self, "_last_search", None))
 
     def result(self, machine: str | None = None) -> SweepResult:
         return self._ensure().result(machine)

@@ -42,6 +42,8 @@ def open_store(
     load_workers: int | None = None,
     backend: str | None = None,
     writer_id: str | None = None,
+    max_age_s: float | None = None,
+    max_records: int | None = None,
 ) -> ResultStore:
     """Open a result store, resolving the backend from what's on disk.
 
@@ -50,6 +52,11 @@ def open_store(
     fresh path goes by spelling — a ``.jsonl`` suffix means the single-file
     backend, anything else creates a sharded directory (the service-grade
     default for new stores).
+
+    ``max_age_s`` / ``max_records`` attach a retention policy: records older
+    than the TTL read as misses (and drop), and the live entry count is
+    bounded by evicting oldest-first — the newest generation of estimates
+    always survives.  See :class:`~repro.store.jsonl.ResultStore`.
     """
     p = Path(path)
     if backend is None:
@@ -60,7 +67,15 @@ def open_store(
         else:
             backend = "jsonl" if p.suffix == ".jsonl" else "sharded"
     if backend == "sharded":
-        return ShardedStore(p, load_workers=load_workers, writer_id=writer_id)
+        return ShardedStore(
+            p,
+            load_workers=load_workers,
+            writer_id=writer_id,
+            max_age_s=max_age_s,
+            max_records=max_records,
+        )
     if backend == "jsonl":
-        return ResultStore(p, load_workers=load_workers)
+        return ResultStore(
+            p, load_workers=load_workers, max_age_s=max_age_s, max_records=max_records
+        )
     raise ValueError(f"unknown store backend {backend!r} (jsonl | sharded)")

@@ -24,14 +24,25 @@ torn write that happens to end on ``}`` is detected at load time and
 structurally closed but still unparsable (hand-edited, not a torn write)
 falls back to one eager reload on first touch.
 
-Schema notes (v4): records carry two optional provenance fields next to the
+Schema notes (v4): records carry three optional provenance fields next to the
 payload — ``machine`` (which architecture produced the record, added for
-cross-machine exploration) and ``builder_version`` (the
+cross-machine exploration), ``builder_version`` (the
 :data:`repro.frontend.ir.BUILDER_VERSION` token of the IR-builder pipeline
-that produced the estimate, added with the unified v4 payload schema).  Both
-are *accounting* fields: the cache key already disambiguates machines and
-builder versions, so files written before either field existed load fine (the
-fields read as ``None``) and old readers ignore them.  v3-keyed records in an
+that produced the estimate, added with the unified v4 payload schema) and
+``ts`` (epoch-seconds write timestamp, the basis of the TTL/eviction policy
+below).  All are *accounting* fields: the cache key already disambiguates
+machines and builder versions, so files written before any of the fields
+existed load fine (the fields read as ``None``) and old readers ignore them.
+
+Retention (opt-in): ``max_age_s=`` expires records older than the given TTL —
+at load, on :meth:`get` (an expired hit reads as a miss) and at
+:meth:`compact` time; records with no ``ts`` (pre-schema files) count as
+infinitely old under a TTL.  ``max_records=`` bounds the live entry count,
+evicting oldest-first (by ``ts``, then replay order) so the newest generation
+of estimates survives.  Either policy forces eager payload materialization at
+load (eviction needs every record's timestamp).  Eviction edits only the
+in-memory view; the log shrinks at the next :meth:`compact`, which also takes
+an explicit ``ttl_s=`` for one-off trims of stores opened without a policy.  v3-keyed records in an
 existing file are never *hits* under v4 keys (the key string embeds the
 version), but they still load, count and survive :meth:`compact` — a re-run
 simply re-estimates and appends v4 records alongside.
@@ -46,6 +57,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from pathlib import Path
 from typing import Iterator
 
@@ -72,9 +84,15 @@ def _parse_store_lines(lines: list[str]) -> list[tuple]:
             continue
         try:
             rec = json.loads(line)
-            # records predating either provenance field read it as None
+            # records predating any provenance field read it as None
             out.append(
-                (rec["key"], rec["payload"], rec.get("machine"), rec.get("builder_version"))
+                (
+                    rec["key"],
+                    rec["payload"],
+                    rec.get("machine"),
+                    rec.get("builder_version"),
+                    rec.get("ts"),
+                )
             )
         except (json.JSONDecodeError, KeyError, TypeError):
             continue
@@ -142,14 +160,34 @@ class ResultStore:
     # below this, even the eager path is cheap enough not to bother a pool
     PARALLEL_MIN_LINES = 20_000
 
-    def __init__(self, path: str | os.PathLike, load_workers: int | None = None):
+    def __init__(
+        self,
+        path: str | os.PathLike,
+        load_workers: int | None = None,
+        max_age_s: float | None = None,
+        max_records: int | None = None,
+    ):
+        if max_age_s is not None and max_age_s <= 0:
+            raise ValueError(f"max_age_s must be > 0, got {max_age_s}")
+        if max_records is not None and max_records < 1:
+            raise ValueError(f"max_records must be >= 1, got {max_records}")
         self.path = Path(path)
         self.load_workers = load_workers
+        self.max_age_s = max_age_s
+        self.max_records = max_records
         # values are parsed payload dicts, or the raw record line (lazy)
         self._mem: dict[str, dict | str] = {}
         self._machine: dict[str, str | None] = {}
         self._builder: dict[str, object] = {}
+        self._ts: dict[str, float | None] = {}
+        self._seq: dict[str, int] = {}  # recency among equal/missing timestamps
+        self._next_seq = 0
         self._load()
+        if max_age_s is not None or max_records is not None:
+            # eviction needs every record's timestamp, so the retention
+            # policies trade the lazy load for a correct bounded view
+            self._materialize_all()
+            self._evict()
 
     # ---- IO seams (overridden by the sharded backend) --------------------- #
 
@@ -188,21 +226,32 @@ class ResultStore:
                 key = _scan_key(line)
                 if key is not None:
                     self._mem[key] = line  # payload parses lazily on get()
+                    self._bump_seq(key)
                     continue
-                for key, payload, machine, bv in _parse_store_lines([line]):
-                    self._mem[key] = payload
-                    self._machine[key] = machine
-                    self._builder[key] = bv
+                for rec in _parse_store_lines([line]):
+                    self._absorb(rec)
             return
         records = None
         if workers > 1 and len(lines) > 1:
             records = self._load_parallel(lines, workers)
         if records is None:
             records = _parse_store_lines(lines)
-        for key, payload, machine, bv in records:
-            self._mem[key] = payload
-            self._machine[key] = machine
-            self._builder[key] = bv
+        for rec in records:
+            self._absorb(rec)
+
+    def _bump_seq(self, key: str) -> None:
+        self._seq[key] = self._next_seq
+        self._next_seq += 1
+
+    def _absorb(self, rec: tuple) -> None:
+        """Install one parsed (key, payload, machine, builder_version, ts)
+        record, refreshing the key's recency position."""
+        key, payload, machine, bv, ts = rec
+        self._mem[key] = payload
+        self._machine[key] = machine
+        self._builder[key] = bv
+        self._ts[key] = ts
+        self._bump_seq(key)
 
     @staticmethod
     def _load_parallel(lines, workers) -> list[tuple] | None:
@@ -240,16 +289,17 @@ class ResultStore:
             self._mem.clear()
             self._machine.clear()
             self._builder.clear()
-            for k, payload, machine, bv in _parse_store_lines(self._read_lines()):
-                self._mem[k] = payload
-                self._machine[k] = machine
-                self._builder[k] = bv
-            return self._mem.get(key)
-        _, payload, machine, bv = parsed[0]
-        self._mem[key] = payload
-        self._machine[key] = machine
-        self._builder[key] = bv
-        return payload
+            self._ts.clear()
+            self._seq.clear()
+            for rec in _parse_store_lines(self._read_lines()):
+                self._absorb(rec)
+            v = self._mem.get(key)
+            return v if not isinstance(v, str) else None
+        seq = self._seq.get(key)  # materializing is not a write: keep recency
+        self._absorb(parsed[0])
+        if seq is not None:
+            self._seq[key] = seq
+        return parsed[0][1]
 
     def _materialize_all(self) -> None:
         for key in [k for k, v in self._mem.items() if isinstance(v, str)]:
@@ -258,6 +308,12 @@ class ResultStore:
     # ---- dict-like API ---------------------------------------------------- #
 
     def get(self, key: str) -> dict | None:
+        if self.max_age_s is not None and key in self._mem:
+            ts = self._ts.get(key)
+            if (ts or 0.0) < time.time() - self.max_age_s:
+                self._drop(key)  # an expired hit is a miss
+                obs_metrics.counter("store.evicted", policy="ttl").inc()
+                return None
         v = self._mem.get(key)
         if isinstance(v, str):
             return self._materialize(key)
@@ -269,21 +325,59 @@ class ResultStore:
         payload: dict,
         machine: str | None = None,
         builder_version: int | str | None = None,
+        ts: float | None = None,
     ) -> None:
         # span granularity: one append per estimated config — a disabled span
         # is two perf_counter calls, and the always-on latency histogram is
         # what the phase breakdown in BENCH_sweep.json reads
         with obs_trace.span("store.append") as sp:
+            if ts is None:
+                ts = time.time()
             self._mem[key] = payload
             self._machine[key] = machine
             self._builder[key] = builder_version
+            self._ts[key] = ts
+            self._bump_seq(key)
             rec: dict = {"key": key, "payload": payload}
             if machine is not None:
                 rec["machine"] = machine
             if builder_version is not None:
                 rec["builder_version"] = builder_version
+            rec["ts"] = round(ts, 3)
             self._append_line(json.dumps(rec, default=list))
+            if self.max_records is not None and len(self._mem) > self.max_records:
+                self._evict()
         obs_metrics.histogram("store.append_seconds").observe(sp.duration_s)
+
+    def _drop(self, key: str) -> None:
+        self._mem.pop(key, None)
+        self._machine.pop(key, None)
+        self._builder.pop(key, None)
+        self._ts.pop(key, None)
+        self._seq.pop(key, None)
+
+    def _evict(self) -> int:
+        """Enforce the retention policies on the in-memory view; returns the
+        number of entries dropped.  The log itself shrinks at :meth:`compact`."""
+        dropped = 0
+        if self.max_age_s is not None:
+            cutoff = time.time() - self.max_age_s
+            for key in [
+                k for k in self._mem if (self._ts.get(k) or 0.0) < cutoff
+            ]:
+                self._drop(key)
+                dropped += 1
+        if self.max_records is not None and len(self._mem) > self.max_records:
+            by_age = sorted(
+                self._mem,
+                key=lambda k: (self._ts.get(k) or 0.0, self._seq.get(k, 0)),
+            )
+            for key in by_age[: len(self._mem) - self.max_records]:
+                self._drop(key)
+                dropped += 1
+        if dropped:
+            obs_metrics.counter("store.evicted", policy="retention").inc(dropped)
+        return dropped
 
     def __contains__(self, key: str) -> bool:
         return key in self._mem
@@ -321,10 +415,30 @@ class ResultStore:
                 rec["machine"] = self._machine[key]
             if self._builder.get(key) is not None:
                 rec["builder_version"] = self._builder[key]
+            if self._ts.get(key) is not None:
+                rec["ts"] = round(self._ts[key], 3)
             yield json.dumps(rec, default=list)
 
-    def compact(self) -> None:
-        """Rewrite the log with one line per live key (drops superseded writes)."""
+    def _apply_ttl(self, ttl_s: float | None) -> None:
+        """Expire entries older than ``ttl_s`` (one-off, for compaction) plus
+        whatever standing policy the store was opened with."""
+        if ttl_s is not None:
+            self._materialize_all()
+            cutoff = time.time() - ttl_s
+            for key in [
+                k for k in self._mem if (self._ts.get(k) or 0.0) < cutoff
+            ]:
+                self._drop(key)
+        if self.max_age_s is not None or self.max_records is not None:
+            self._materialize_all()
+            self._evict()
+
+    def compact(self, ttl_s: float | None = None) -> None:
+        """Rewrite the log with one line per live key (drops superseded
+        writes).  ``ttl_s`` additionally expires records older than the given
+        age, regardless of how the store was opened — the CLI's
+        ``store compact --ttl`` path."""
+        self._apply_ttl(ttl_s)
         tmp = self.path.with_suffix(".tmp")
         with tmp.open("w") as f:
             for line in self._live_record_lines():

@@ -57,9 +57,16 @@ class ShardedStore(ResultStore):
         path: str | os.PathLike,
         load_workers: int | None = None,
         writer_id: str | None = None,
+        max_age_s: float | None = None,
+        max_records: int | None = None,
     ):
         self.writer_id = str(writer_id if writer_id is not None else os.getpid())
-        super().__init__(path, load_workers=load_workers)
+        super().__init__(
+            path,
+            load_workers=load_workers,
+            max_age_s=max_age_s,
+            max_records=max_records,
+        )
 
     # ---- layout ----------------------------------------------------------- #
 
@@ -113,7 +120,7 @@ class ShardedStore(ResultStore):
                 out[layer.name] = sum(1 for _ in f)
         return out
 
-    def compact(self) -> None:
+    def compact(self, ttl_s: float | None = None) -> None:
         """Fold every layer into ``compacted.jsonl`` and drop the segments.
 
         Offline maintenance: holds the directory lock so two compactions
@@ -121,6 +128,7 @@ class ShardedStore(ResultStore):
         may predate other writers' appends), folds live records, atomically
         replaces the compacted layer, then unlinks exactly the segment files
         that were folded — a segment created mid-compaction survives.
+        ``ttl_s`` expires records older than the given age while folding.
         """
         self.path.mkdir(parents=True, exist_ok=True)
         with (self.path / _DIR_LOCK).open("w") as lock:
@@ -131,7 +139,10 @@ class ShardedStore(ResultStore):
                 self._mem.clear()
                 self._machine.clear()
                 self._builder.clear()
+                self._ts.clear()
+                self._seq.clear()
                 self._load_inner()
+                self._apply_ttl(ttl_s)
                 tmp = self.path / (COMPACTED + ".tmp")
                 with tmp.open("w") as f:
                     for line in self._live_record_lines():

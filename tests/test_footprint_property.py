@@ -72,6 +72,31 @@ def test_footprint_granularity_monotone(accesses, box):
     assert f32 > 0
 
 
+@settings(max_examples=60, deadline=None)
+@given(
+    accesses=st.lists(access_strategy(), min_size=1, max_size=6),
+    bxs=st.lists(boxes, min_size=1, max_size=3),
+    granularity=st.sampled_from([32, 128]),
+    store_mask=st.integers(0, 63),
+)
+def test_batched_equals_reference_line_sets(accesses, bxs, granularity, store_mask):
+    """The vectorized address-matrix path must reproduce the reference
+    per-access enumeration bit-exactly, for every stores filter and any
+    number of boxes (wave geometries pass several)."""
+    import dataclasses
+
+    accesses = [
+        dataclasses.replace(a, is_store=bool(store_mask >> i & 1))
+        for i, a in enumerate(accesses)
+    ]
+    for stores in (None, True, False):
+        ref = fe.line_sets(accesses, bxs, granularity, stores=stores)
+        bat = fe.line_sets_batched(accesses, bxs, granularity, stores=stores)
+        assert ref.keys() == bat.keys()
+        for name in ref:
+            np.testing.assert_array_equal(ref[name], bat[name])
+
+
 @settings(max_examples=40, deadline=None)
 @given(
     accesses=st.lists(access_strategy(), min_size=1, max_size=4),

@@ -1,0 +1,234 @@
+"""Budget-aware model-guided search (``Study.run(search=...)``).
+
+Contracts under test:
+
+* successive halving finds the exhaustive sweep's best config on a quarter
+  of the budget, and its records are bit-identical to the exhaustive path's
+  (same store keys, same metrics) — the search changes WHICH configs get
+  estimated, never what an estimate is;
+* the budget is a hard cap on configs fully estimated on the primary
+  machine, and store hits count against it, so a search resumed from a warm
+  store selects the same set and re-estimates nothing;
+* lazy space sampling is seed-deterministic and duplicate-free;
+* ``pareto_recall`` matches a hand-computed value;
+* the proposer's unspent reserve backfills down the proxy ranking instead of
+  going unused;
+* the multi-machine finalist rung re-estimates top configs on the study's
+  other machines only.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import appspec
+from repro.core.machine import A100_40GB, V100
+from repro.explore import Study
+from repro.explore.search import (
+    LocalSearch,
+    SuccessiveHalving,
+    config_key,
+    evaluations_to_recall,
+    pareto_recall,
+    recall_curve,
+)
+from repro.explore.space import SearchSpace, choice, exact_volume, pow2
+
+GRID = (128, 64, 64)  # reduced grid keeps each full estimate cheap
+
+
+def build_small(block, fold=(1, 1, 1)):
+    return appspec.star3d(block=block, fold=fold, grid=GRID)
+
+
+def small_space() -> SearchSpace:
+    """38 configs: 19 pow2 block shapes at 256 threads x 2 fold variants."""
+    return SearchSpace(
+        axes=(
+            pow2("bx", 4, 64),
+            pow2("by", 1, 16),
+            pow2("bz", 1, 16),
+            choice("fold", ((1, 1, 1), (1, 2, 1))),
+        ),
+        constraints=(exact_volume(("bx", "by", "bz"), 256),),
+        assemble=lambda raw: {
+            "block": (raw["bx"], raw["by"], raw["bz"]),
+            "fold": raw["fold"],
+        },
+    )
+
+
+# --------------------------------------------------------------------------- #
+# halving quality + bit-identity with the exhaustive path
+
+
+def test_halving_finds_exhaustive_argmin_under_quarter_budget():
+    exhaustive = Study(build_small, small_space(), machine=V100).run().result()
+    n = len(exhaustive.records)
+    budget = max(1, n // 4)
+    res = Study(build_small, small_space(), machine=V100).run(
+        search=SuccessiveHalving(budget=budget)
+    )
+    stats = res.search_stats
+    assert stats.full_selected <= budget
+    assert stats.full_selected / n <= 0.25
+    assert res.result().top(1)[0].config == exhaustive.top(1)[0].config
+
+
+def test_search_records_bit_identical_to_exhaustive():
+    exhaustive = Study(build_small, small_space(), machine=V100).run().result()
+    truth = {config_key(r): r for r in exhaustive.records}
+    res = Study(build_small, small_space(), machine=V100).run(
+        search=SuccessiveHalving(budget=10)
+    )
+    searched = res.result().records
+    assert searched, "search produced no records"
+    for rec in searched:
+        ref = truth[config_key(rec)]
+        assert rec.metrics == ref.metrics
+        assert rec.fingerprint == ref.fingerprint
+
+
+def test_budget_cap_never_exceeded_and_full_keys_match():
+    for budget in (1, 5, 12):
+        res = Study(build_small, small_space(), machine=V100).run(
+            search=SuccessiveHalving(budget=budget)
+        )
+        stats = res.search_stats
+        assert stats.full_selected <= budget
+        assert len(stats.full_keys) == stats.full_selected
+        assert len(res.result().records) == stats.full_selected
+
+
+def test_search_resumes_from_store_with_identical_records(tmp_path):
+    store = tmp_path / "search.jsonl"
+    search = SuccessiveHalving(budget=9)
+    first = Study(build_small, small_space(), machine=V100, store=store).run(
+        search=search
+    )
+    assert first.search_stats.full_cache_hits == 0
+    # a fresh study over a warm store: same selection, zero re-estimation
+    second = Study(build_small, small_space(), machine=V100, store=store).run(
+        search=search
+    )
+    assert second.search_stats.full_cache_hits == second.search_stats.full_selected
+    assert second.result().stats.evaluated == 0
+    assert [r.config for r in second.result().records] == [
+        r.config for r in first.result().records
+    ]
+    assert [r.metrics for r in second.result().records] == [
+        r.metrics for r in first.result().records
+    ]
+
+
+def test_study_resume_replays_the_last_search(tmp_path):
+    store = tmp_path / "search.jsonl"
+    study = Study(build_small, small_space(), machine=V100, store=store)
+    study.run(search=SuccessiveHalving(budget=7))
+    res = study.resume()
+    assert res.search_stats is not None
+    assert res.search_stats.full_cache_hits == res.search_stats.full_selected
+
+
+def test_search_requires_gpu_backend():
+    with pytest.raises(ValueError, match="GPU"):
+        Study("stencil25_tpu").run(search=SuccessiveHalving(budget=4))
+
+
+# --------------------------------------------------------------------------- #
+# sampling, convergence metrics
+
+
+def test_lazy_sampling_deterministic_and_duplicate_free():
+    space = small_space()
+    a = space.sample_lazy(12, seed=3, with_raw=True)
+    b = space.sample_lazy(12, seed=3, with_raw=True)
+    assert a == b
+    keys = [config_key(cfg) for _, cfg in a]
+    assert len(set(keys)) == len(keys)
+    other = space.sample_lazy(12, seed=4, with_raw=True)
+    assert other != a  # different seed, different draw
+    strat = space.sample_stratified(12, seed=3, with_raw=True)
+    assert len(strat) <= 12
+    skeys = [config_key(cfg) for _, cfg in strat]
+    assert len(set(skeys)) == len(skeys)
+
+
+def test_sampled_search_respects_pool_and_budget():
+    res = Study(build_small, small_space(), machine=V100).run(
+        search=SuccessiveHalving(budget=6, sample=20, seed=1)
+    )
+    stats = res.search_stats
+    assert stats.pool <= 20
+    assert stats.full_selected <= 6
+
+
+def test_pareto_recall_hand_computed():
+    truth = [{"block": (2, 2, 2)}, {"block": (4, 4, 4)}, {"block": (8, 8, 8)}]
+    found = [{"block": (2, 2, 2)}, {"block": (8, 8, 8)}, {"block": (1, 1, 1)}]
+    assert pareto_recall(found, truth) == pytest.approx(2 / 3)
+    assert pareto_recall([], truth) == 0.0
+    assert pareto_recall(found, []) == 1.0
+    curve = recall_curve(found, truth)
+    assert curve == [(1, pytest.approx(1 / 3)), (2, pytest.approx(2 / 3)),
+                     (3, pytest.approx(2 / 3))]
+    assert evaluations_to_recall(curve, 0.5) == 2
+    assert evaluations_to_recall(curve, 0.9) is None
+
+
+def test_search_recovers_pareto_front_on_quarter_budget():
+    exhaustive = Study(build_small, small_space(), machine=V100).run().result()
+    front = exhaustive.pareto()
+    res = Study(build_small, small_space(), machine=V100).run(
+        search=SuccessiveHalving(budget=max(1, len(exhaustive.records) // 4))
+    )
+    assert pareto_recall(res.result().records, front) >= 0.9
+
+
+# --------------------------------------------------------------------------- #
+# proposer + backfill + multi-machine rungs
+
+
+def test_backfill_spends_unspent_proposer_reserve():
+    # the pool enumerates the whole space, so every neighbor the proposer
+    # perturbs toward is already seen and the reserve goes unproposed — the
+    # backfill rung must spend it down the proxy ranking instead
+    budget = 12
+    res = Study(build_small, small_space(), machine=V100).run(
+        search=SuccessiveHalving(
+            budget=budget, proposer=LocalSearch(rounds=1, promote=4)
+        )
+    )
+    stats = res.search_stats
+    assert stats.proposed == 0
+    assert stats.full_selected == budget
+    assert any(r["rung"] == "backfill" for r in stats.rungs)
+
+
+def test_proposer_promotes_on_sampled_pools():
+    res = Study(build_small, small_space(), machine=V100).run(
+        search=SuccessiveHalving(
+            budget=10, sample=16, seed=0,
+            proposer=LocalSearch(rounds=1, top_k=3, promote=4),
+        )
+    )
+    stats = res.search_stats
+    assert stats.full_selected <= 10
+    assert stats.promoted <= stats.proposed
+
+
+def test_multi_machine_finalist_rung():
+    res = Study(build_small, small_space(), machines=[V100, A100_40GB]).run(
+        search=SuccessiveHalving(budget=9, eta=3)
+    )
+    primary, other = res.machines
+    stats = res.search_stats
+    finalists = res.result(other).records
+    assert stats.multi_selected == len(finalists)
+    assert 1 <= len(finalists) <= 3  # ceil(budget / eta)
+    estimated = {config_key(r) for r in res.result(primary).records}
+    assert {config_key(r) for r in finalists} <= estimated
+    # finalist records really are the other machine's estimates
+    solo = Study(build_small, small_space(), machine=A100_40GB).run().result()
+    truth = {config_key(r): r for r in solo.records}
+    for rec in finalists:
+        assert rec.metrics == truth[config_key(rec)].metrics

@@ -24,6 +24,7 @@ import json
 import os
 import subprocess
 import sys
+import time
 from pathlib import Path
 
 import pytest
@@ -287,3 +288,65 @@ def test_alias_key_is_spelling_sensitive_by_design(tmp_path):
     k3 = alias_key("stencil25", "gpu", {"block": (32, 8, 5)})
     assert k1 == k2  # canonical_key folds list/tuple
     assert k1 != k3
+
+
+# --------------------------------------------------------------------------- #
+# retention: TTL + record-count eviction
+
+
+def test_ttl_expired_hits_read_as_misses(tmp_path):
+    p = tmp_path / "s.jsonl"
+    ResultStore(p).put("old", {"v": 1}, ts=time.time() - 3600)
+    s = open_store(p, max_age_s=60)
+    s.put("new", {"v": 2})
+    assert s.get("old") is None  # expired hit is a miss (and drops)
+    assert "old" not in s
+    assert s.get("new") == {"v": 2}
+
+
+def test_ttl_treats_legacy_ts_less_records_as_infinitely_old(tmp_path):
+    p = tmp_path / "s.jsonl"
+    p.write_text(json.dumps({"key": "legacy", "payload": {"v": 1}}) + "\n")
+    assert ResultStore(p).get("legacy") == {"v": 1}  # no policy: still served
+    assert open_store(p, max_age_s=10**9).get("legacy") is None
+
+
+def test_max_records_evicts_oldest_keeping_newest_generation(tmp_path):
+    for store in (
+        open_store(tmp_path / "f.jsonl", max_records=3),
+        open_store(tmp_path / "d", max_records=3),
+    ):
+        t0 = time.time() - 100
+        for i in range(5):
+            store.put(f"k{i}", {"v": i}, ts=t0 + i)
+        assert len(store) == 3
+        assert set(store.keys()) == {"k2", "k3", "k4"}
+        # overwriting an old key with a newer ts refreshes it past eviction
+        store.put("k2", {"v": 22}, ts=t0 + 50)
+        store.put("k5", {"v": 5}, ts=t0 + 6)
+        store.put("k6", {"v": 6}, ts=t0 + 7)
+        assert "k2" in store and store.get("k2") == {"v": 22}
+        assert "k3" not in store
+
+
+def test_compact_ttl_shrinks_disk_for_both_backends(tmp_path):
+    paths = (tmp_path / "f.jsonl", tmp_path / "d")
+    for path in paths:
+        store = open_store(path)
+        store.put("stale", {"v": 0}, ts=time.time() - 3600)
+        store.put("fresh", {"v": 1})
+        store.compact(ttl_s=60)
+    for path in paths:
+        fresh = open_store(path)
+        assert fresh.get("stale") is None
+        assert fresh.get("fresh") == {"v": 1}
+        assert len(fresh) == 1
+    # the stale record is gone from disk, not just the in-memory view
+    assert "stale" not in (tmp_path / "f.jsonl").read_text()
+
+
+def test_retention_rejects_nonsense_policies(tmp_path):
+    with pytest.raises(ValueError):
+        open_store(tmp_path / "a.jsonl", max_age_s=0)
+    with pytest.raises(ValueError):
+        open_store(tmp_path / "b.jsonl", max_records=0)
