@@ -672,6 +672,62 @@ def batched_oracle_throughput():
     return "batched_oracle_throughput", us_vec, derived
 
 
+def lint_overhead():
+    """Static-auditor gate cost -> the ``lint`` entry of BENCH_sweep.json.
+
+    Cold full-space stencil25 sweeps, best of ``reps``, in one process:
+
+      * plain_cfg_per_s  — ``Study(kernel)`` with no lint gate,
+      * linted_cfg_per_s — ``Study(kernel, lint="error")``: every candidate IR
+        statically audited (race/bounds/coverage/alias + V100 perf lints)
+        before estimation.
+
+    The analysis caches are cleared before every linted rep so each rep pays
+    the full audit; the gate shares its ``EstimateCache`` with the estimator,
+    which is why the overhead stays within the <10% acceptance budget.
+    """
+    from repro import analysis
+    from repro.explore import Study
+
+    kernel, reps = "stencil25", 3
+
+    def best_of(fn):
+        times, out = [], None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            times.append(time.perf_counter() - t0)
+        return min(times), out
+
+    def plain():
+        return Study(kernel).result()
+
+    def linted():
+        analysis.clear_cache()
+        return Study(kernel, lint="error").result()
+
+    t_plain, _ = best_of(plain)
+    t_lint, res = best_of(linted)
+    n = len(res.records)
+    payload = {
+        "lint": {
+            "kernel": kernel,
+            "configs": n,
+            "reps": reps,
+            "plain_cfg_per_s": n / t_plain,
+            "linted_cfg_per_s": n / t_lint,
+            "overhead_pct": round((t_lint / t_plain - 1) * 100, 1),
+        }
+    }
+    _update_bench(payload)
+    derived = (
+        f"plain={payload['lint']['plain_cfg_per_s']:.0f}cfg/s "
+        f"linted={payload['lint']['linted_cfg_per_s']:.0f}cfg/s "
+        f"overhead={payload['lint']['overhead_pct']:.1f}%"
+    )
+    return "lint_overhead", t_lint * 1e6, derived
+
+
 def dryrun_roofline_summary():
     t0 = time.perf_counter()
     cells = []
@@ -717,6 +773,7 @@ BENCHES = [
     study_multimachine_sharing,
     search_convergence,
     batched_oracle_throughput,
+    lint_overhead,
     dryrun_roofline_summary,
 ]
 

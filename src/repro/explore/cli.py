@@ -288,6 +288,8 @@ def main(argv: list[str] | None = None) -> int:
         return _search_main(argv[1:])
     if argv and argv[0] == "store":
         return _store_main(argv[1:])
+    if argv and argv[0] == "lint":
+        return _lint_main(argv[1:])
     args = _build_parser().parse_args(argv)
     if args.list:
         for name, e in sorted(KERNELS.items()):
@@ -590,6 +592,153 @@ def _search_main(argv: list[str]) -> int:
         other = result.result(label)
         print(f"\nfinalists on {label} ({len(other.records)} configs):")
         _print_gpu_rows(other.records[: args.top])
+    return 0
+
+
+def _lint_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.explore lint",
+        description="Static access audit (repro.analysis): race / bounds / "
+                    "aliasing / coverage proofs plus coalescing, bank-conflict "
+                    "and capacity lints over a kernel's AccessIR — before any "
+                    "code exists.",
+    )
+    p.add_argument("--kernel", default=None,
+                   help="kernel entry to audit (see `python -m repro.explore --list`)")
+    p.add_argument("--backend", default=None, choices=("gpu", "tpu"),
+                   help="resolve a kernel family to its gpu or tpu entry")
+    p.add_argument("--config", default=None, metavar="JSON",
+                   help="one GPU config dict, e.g. "
+                        "'{\"block\": [32, 4, 8], \"fold\": [1, 1, 1]}' "
+                        "(default: every config of the entry's space); on tpu "
+                        "entries a substring filter on the PallasConfig name")
+    p.add_argument("--all", action="store_true", dest="lint_all",
+                   help="audit every registry kernel (both backends, full spaces)")
+    p.add_argument("--fixture", default=None, metavar="NAME",
+                   help="audit a seeded-bug fixture from repro.analysis.fixtures "
+                        "('all' runs every fixture; these are EXPECTED to flag)")
+    p.add_argument("--machine", default=None,
+                   help=f"machine for the perf lints (registry: "
+                        f"{', '.join(sorted(MACHINES))}; default: the entry's)")
+    p.add_argument("--mode", default="auto", choices=("auto", "enum", "structured"),
+                   help="correctness tier: enumerate small iteration spaces or "
+                        "force the symbolic/affine prover")
+    p.add_argument("--rules", default=None, metavar="PREFIXES",
+                   help="comma-separated rule prefixes to keep, e.g. 'race,bounds'")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="machine-readable JSON reports (schema repro.lint/v1)")
+    p.add_argument("--fail-on", default="error", choices=("error", "warn", "never"),
+                   help="exit 1 when any finding at/above this severity (default error)")
+    return p
+
+
+def _lint_irs(args) -> list[tuple[str, object, object]]:
+    """Resolve the audit set: ``(label, ir, machine)`` triples."""
+    from ..frontend.pallas import trace_pallas
+
+    triples: list[tuple[str, object, object]] = []
+
+    def tpu_machine(entry):
+        return get_machine(
+            canonical_machine_name(args.machine) if args.machine
+            else ("TPUv5e" if entry.backend == "tpu" else entry.default_machine)
+        )
+
+    def add_entry(entry, config_filter=None):
+        mach = tpu_machine(entry)
+        if entry.backend == "gpu":
+            cfgs = [config_filter] if isinstance(config_filter, dict) \
+                else entry.space().configs()
+            for cfg in cfgs:
+                triples.append(
+                    (f"{entry.name} {_fmt_cfg(cfg)}", entry.build_ir(**cfg), mach)
+                )
+        else:
+            for c in entry.tpu_configs():
+                if isinstance(config_filter, str) and config_filter not in c.name:
+                    continue
+                triples.append((f"{entry.name} {c.name}", trace_pallas(c), mach))
+
+    if args.fixture:
+        from ..analysis.fixtures import FIXTURES
+
+        names = sorted(FIXTURES) if args.fixture == "all" else [args.fixture]
+        mach = get_machine(canonical_machine_name(args.machine or "V100"))
+        for name in names:
+            if name not in FIXTURES:
+                raise KeyError(
+                    f"unknown fixture {name!r} (have: {', '.join(sorted(FIXTURES))})"
+                )
+            triples.append((f"fixture:{name}", FIXTURES[name](), mach))
+        return triples
+    if args.lint_all:
+        for _, entry in sorted(KERNELS.items()):
+            add_entry(entry)
+        return triples
+    entry = get_kernel(args.kernel, backend=args.backend)
+    cfg_filter = None
+    if args.config is not None:
+        cfg_filter = (
+            json.loads(args.config) if entry.backend == "gpu" else args.config
+        )
+        if entry.backend == "gpu" and not isinstance(cfg_filter, dict):
+            raise ValueError("--config must be a JSON object on gpu entries")
+    add_entry(entry, cfg_filter)
+    return triples
+
+
+def _lint_main(argv: list[str]) -> int:
+    args = _lint_parser().parse_args(argv)
+    if not (args.kernel or args.lint_all or args.fixture):
+        return _fail("one of --kernel, --all, --fixture is required")
+    from .. import analysis
+
+    rules = tuple(r for r in (args.rules or "").split(",") if r) or None
+    try:
+        triples = _lint_irs(args)
+    except (ValueError, KeyError, TypeError) as e:
+        return _fail(e)
+    if not triples:
+        return _fail("nothing matched the audit selection")
+    reports = []
+    for label, ir, mach in triples:
+        rep = analysis.analyze_ir(ir, mach, rules=rules, mode=args.mode)
+        reports.append((label, rep))
+    worst = "info"
+    for _, rep in reports:
+        c = rep.counts
+        if c["error"]:
+            worst = "error"
+        elif c["warn"] and worst != "error":
+            worst = "warn"
+    if args.as_json:
+        print(json.dumps(
+            {
+                "schema": analysis.SCHEMA,
+                "worst": worst,
+                "reports": [
+                    dict(rep.to_json(), label=label) for label, rep in reports
+                ],
+            },
+            indent=2,
+        ))
+    else:
+        for label, rep in reports:
+            c = rep.counts
+            print(f"== {label} [{rep.granularity}]"
+                  + (f" on {rep.machine}" if rep.machine else "")
+                  + f": {c['error']} error(s), {c['warn']} warn(s), "
+                    f"{c['info']} info ==")
+            for f in rep.findings:
+                print("\n".join("  " + ln for ln in f.render().splitlines()))
+            print()
+        n_err = sum(rep.counts["error"] for _, rep in reports)
+        n_warn = sum(rep.counts["warn"] for _, rep in reports)
+        print(f"audited {len(reports)} IR(s): {n_err} error(s), {n_warn} warn(s)")
+    if args.fail_on != "never" and any(
+        not rep.ok(args.fail_on) for _, rep in reports
+    ):
+        return 1
     return 0
 
 

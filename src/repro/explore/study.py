@@ -565,6 +565,7 @@ class Study:
         seed: int = 0,
         cache: EstimateCache | None = None,
         alias=None,
+        lint: str | None = None,
     ):
         self.name, self.entry, self._build, self._build_ir = _resolve(kernel, backend)
         self.backend = self.entry.backend if self.entry is not None else "gpu"
@@ -668,6 +669,16 @@ class Study:
             else:
                 self.alias = AliasStore(alias)
 
+        # static-analysis gate (repro.analysis): "error"/"warn" fail fast with
+        # LintError before any estimate is computed, "annotate" only collects
+        # reports (self.lint_reports, explain() lint section), None/"off" skip
+        if lint not in (None, "off", "error", "warn", "annotate"):
+            raise ValueError(
+                f"lint={lint!r}: pass None, 'off', 'error', 'warn' or 'annotate'"
+            )
+        self.lint: str | None = None if lint == "off" else lint
+        self.lint_reports: dict = {}  # fingerprint -> analysis.Report
+
         self._estimator = get_estimator(self.backend, method=self.method, fits=fits)
         self._cands: list[_Candidate] | None = None
         self._space_report: FilterReport | None = None
@@ -767,6 +778,7 @@ class Study:
         method: str = "sym",
         fits: CapacityFits | None = None,
         cache: EstimateCache | None = None,
+        lint: str | None = None,
     ):
         """Whole-model prediction: trace one model step into a kernel DAG,
         estimate every unique kernel through this same estimator protocol,
@@ -779,7 +791,7 @@ class Study:
 
         return _graph_step_time(
             model, machine, mesh=mesh, batch=batch, seq=seq, kind=kind,
-            method=method, fits=fits, cache=cache,
+            method=method, fits=fits, cache=cache, lint=lint,
         )
 
     def explain(self, config="best", machine: str | None = None):
@@ -845,15 +857,19 @@ class Study:
                 )
             if cand.ir is None:
                 self._trace([cand])
-            return explain_mod.explain_tpu_record(rec, cand.ir, machine)
-        fits = self.fits if self.fits is not None else machine.fits
-        return explain_mod.explain_gpu_record(
-            rec,
-            machine,
-            fits=fits,
-            spec=self._spec(cand) if cand is not None else None,
-            prune_report=res.prune_report,
-        )
+            report = explain_mod.explain_tpu_record(rec, cand.ir, machine)
+        else:
+            fits = self.fits if self.fits is not None else machine.fits
+            report = explain_mod.explain_gpu_record(
+                rec,
+                machine,
+                fits=fits,
+                spec=self._spec(cand) if cand is not None else None,
+                prune_report=res.prune_report,
+            )
+        if self.lint is not None:
+            report.lint = self.lint_reports.get(rec.fingerprint)
+        return report
 
     def _explain_record(self, res: SweepResult, machine, config) -> SweepRecord:
         """Resolve an ``explain()`` target to a record, estimating on demand
@@ -955,9 +971,38 @@ class Study:
             for c in cands:
                 c.fp = self.alias.get(alias_key(self.name, self.backend, c.config))
         self._trace([c for c in cands if c.fp is None])
+        if self.lint is not None:
+            # linting reads the IR, so alias-warm candidates must trace too
+            self._trace([c for c in cands if c.ir is None])
+            self._lint_gate(cands)
         obs_metrics.counter("study.candidates").inc(len(cands))
         self._cands = cands
         return cands
+
+    def _lint_gate(self, cands: list) -> None:
+        """Run the static analyzer over every candidate IR (once per unique
+        fingerprint) BEFORE estimation: a ranking over configs that race or
+        read out of bounds is worse than no ranking.  ``lint="error"`` /
+        ``"warn"`` raise :class:`repro.analysis.LintError` at the first
+        candidate with findings at that severity; ``"annotate"`` only records
+        the reports (``self.lint_reports``, the ``explain()`` lint section)."""
+        from .. import analysis
+
+        machine = self._machines[0][1]
+        with obs_trace.span("study.lint", kernel=self.name, configs=len(cands)):
+            for c in cands:
+                if c.fp not in self.lint_reports:
+                    spec = self._spec(c) if self.backend == "gpu" else None
+                    self.lint_reports[c.fp] = analysis.analyze_ir(
+                        c.ir, machine, estimate_cache=self.cache, spec=spec,
+                        fingerprint=c.fp,
+                    )
+                if self.lint in ("error", "warn"):
+                    rep = self.lint_reports[c.fp]
+                    if not rep.ok(self.lint):
+                        raise analysis.LintError(
+                            rep, self.lint, context=f"config {c.config}"
+                        )
 
     def _trace(self, todo: list[_Candidate]) -> None:
         """Trace the IR (and fingerprint) of exactly these candidates.

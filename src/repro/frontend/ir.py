@@ -51,10 +51,43 @@ BUILDER_VERSION = 1
 
 
 def _tupled(x):
-    """Recursively freeze lists/tuples into tuples (spelling normalisation)."""
+    """Recursively freeze lists/tuples into tuples (spelling normalisation).
+
+    numpy arrays (and anything else exposing ``tolist``) are unwrapped first:
+    builders that assemble coefficient matrices with numpy used to smuggle
+    ndarray rows into the frozen dataclass, which only surfaced as a deep
+    broadcast failure at lowering time.
+    """
+    if hasattr(x, "tolist") and not isinstance(x, (int, float, str)):
+        x = x.tolist()
     if isinstance(x, (list, tuple)):
         return tuple(_tupled(v) for v in x)
     return x
+
+
+def _int_matrix(coeffs, offset, field_name: str):
+    """Validate + canonicalise an affine map's (coeffs, offset) to int tuples.
+
+    Every entry must be an exact integer (numpy integer scalars are fine,
+    floats are not — a float coefficient silently truncating would alias a
+    different access pattern).
+    """
+    import operator
+
+    def as_int(v, what):
+        try:
+            return operator.index(v)
+        except TypeError:
+            raise TypeError(
+                f"access to {field_name!r}: {what} {v!r} is not an integer "
+                f"(affine maps are exact — round or index-cast it explicitly)"
+            ) from None
+
+    coeffs = tuple(
+        tuple(as_int(c, "coefficient") for c in row) for row in coeffs
+    )
+    offset = tuple(as_int(o, "offset") for o in offset)
+    return coeffs, offset
 
 
 @dataclass(frozen=True)
@@ -111,7 +144,10 @@ class IRAccess:
         if isinstance(offset, int):
             offset = (offset,)
         offset = _tupled(offset)
+        if not isinstance(offset, tuple):
+            offset = (offset,)  # scalar numpy offset unwrapped by _tupled
         tile = _tupled(self.tile)
+        coeffs, offset = _int_matrix(coeffs, offset, self.field)
         object.__setattr__(self, "coeffs", coeffs)
         object.__setattr__(self, "offset", offset)
         object.__setattr__(self, "tile", tile)
@@ -122,6 +158,10 @@ class IRAccess:
             )
         if len({len(r) for r in coeffs}) > 1:
             raise ValueError(f"access to {self.field!r}: ragged coefficient rows")
+        if any(not isinstance(t, int) or t <= 0 for t in tile):
+            raise ValueError(
+                f"access to {self.field!r}: tile {tile!r} must be positive ints"
+            )
         if tile:
             if len(tile) != len(coeffs):
                 raise ValueError(

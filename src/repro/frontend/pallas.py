@@ -25,16 +25,75 @@ from .ir import AccessIR, IRAccess, IRField
 
 
 class NonAffineIndexMapError(ValueError):
-    """An ``index_map`` is not an affine function of the grid coordinates."""
+    """An ``index_map`` is not an affine function of the grid coordinates.
+
+    Structured: ``kernel`` / ``operand`` name the offending config and access,
+    ``point`` is the failing probe (a concrete grid coordinate), ``want`` /
+    ``got`` the predicted vs actual block index there.  The message is the
+    rendering of :attr:`finding`, so trace-time diagnostics read exactly like
+    lint-time ones (``repro.analysis``).
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        kernel: str | None = None,
+        operand: str | None = None,
+        point: tuple[int, ...] | None = None,
+        want: tuple[int, ...] | None = None,
+        got: tuple[int, ...] | None = None,
+    ):
+        self.kernel = kernel
+        self.operand = operand
+        self.point = point
+        self.want = want
+        self.got = got
+        super().__init__(self._render(message))
+
+    def _render(self, message: str) -> str:
+        self.finding = self._finding(message)
+        return self.finding.render()
+
+    def _finding(self, message: str):
+        # lazy import: analysis.passes imports frontend.ir, so this module
+        # must not import analysis at module scope
+        from ..analysis.findings import Finding
+
+        return Finding(
+            rule="trace.non_affine",
+            severity="error",
+            field=self.operand,
+            message=message,
+            witness=() if self.point is None else (self.point,),
+            address=self.got,
+            suggestion=(
+                "only affine index maps have an exact AccessIR form; rewrite "
+                "the map (e.g. model clamped boundaries with an interior "
+                "representative block) or estimate it out-of-band"
+            ),
+        )
 
 
-def _probe(index_map, point, where: str) -> tuple[int, ...]:
+def _context(kernel: str | None, operand: str | None, where: str) -> str:
+    if operand is not None:
+        return f"{kernel}.{operand}" if kernel else operand
+    return where
+
+
+def _probe(
+    index_map, point, where: str, kernel: str | None = None, operand: str | None = None
+) -> tuple[int, ...]:
     obs_metrics.counter("pallas.probes").inc()
     try:
         out = index_map(*point)
     except Exception as e:  # pragma: no cover - defensive
         raise NonAffineIndexMapError(
-            f"{where}: index_map raised {e!r} when probed at grid point {point}"
+            f"{_context(kernel, operand, where)}: index_map raised {e!r} when "
+            f"probed at grid point {point}",
+            kernel=kernel,
+            operand=operand,
+            point=point,
         ) from e
     if not isinstance(out, tuple):
         out = (out,)
@@ -56,27 +115,38 @@ def _verification_points(grid: tuple[int, ...]) -> list[tuple[int, ...]]:
 
 
 def trace_index_map(
-    index_map, grid: tuple[int, ...], where: str = "index_map"
+    index_map,
+    grid: tuple[int, ...],
+    where: str = "index_map",
+    *,
+    kernel: str | None = None,
+    operand: str | None = None,
 ) -> tuple[tuple[tuple[int, ...], ...], tuple[int, ...]]:
     """Recover ``(matrix, offset)`` with ``out = matrix @ coords + offset``.
 
     Raises :class:`NonAffineIndexMapError` when the closure disagrees with the
-    recovered affine map at any verification probe.
+    recovered affine map at any verification probe; ``kernel``/``operand``
+    give the error provenance (the config and access being traced) — ``where``
+    is the fallback context string for anonymous maps.
     """
     dims = len(grid)
+    ctx = _context(kernel, operand, where)
     origin = (0,) * dims
-    offset = _probe(index_map, origin, where)
+    offset = _probe(index_map, origin, where, kernel, operand)
     n_out = len(offset)
     cols: list[tuple[int, ...]] = []
     for d in range(dims):
         if grid[d] >= 2:
-            step = _probe(
-                index_map, tuple(1 if j == d else 0 for j in range(dims)), where
-            )
+            pt = tuple(1 if j == d else 0 for j in range(dims))
+            step = _probe(index_map, pt, where, kernel, operand)
             if len(step) != n_out:
                 raise NonAffineIndexMapError(
-                    f"{where}: output rank changed between probes "
-                    f"({n_out} at origin, {len(step)} at unit step {d})"
+                    f"{ctx}: output rank changed between probes "
+                    f"({n_out} at origin, {len(step)} at unit step {d})",
+                    kernel=kernel,
+                    operand=operand,
+                    point=pt,
+                    got=step,
                 )
             cols.append(tuple(step[o] - offset[o] for o in range(n_out)))
         else:
@@ -95,14 +165,17 @@ def trace_index_map(
             offset[o] + sum(matrix[o][d] * pt[d] for d in range(dims))
             for o in range(n_out)
         )
-        got = _probe(index_map, pt, where)
+        got = _probe(index_map, pt, where, kernel, operand)
         if got != want:
             raise NonAffineIndexMapError(
-                f"{where}: not affine over the grid {grid} — the origin/unit-"
+                f"{ctx}: not affine over the grid {grid} — the origin/unit-"
                 f"step probes predict {want} at grid point {pt}, but the map "
-                f"returns {got}.  Only affine index maps have an exact AccessIR "
-                "form; rewrite the map (e.g. model clamped boundaries with an "
-                "interior representative block) or estimate it out-of-band."
+                f"returns {got}",
+                kernel=kernel,
+                operand=operand,
+                point=pt,
+                want=want,
+                got=got,
             )
     return matrix, offset
 
@@ -129,7 +202,7 @@ def trace_pallas(cfg) -> AccessIR:
         seen.add(acc.name)
         tile = tuple(int(b) for b in acc.block_shape)
         matrix, offset = trace_index_map(
-            acc.index_map, grid, where=f"{cfg.name}.{acc.name}"
+            acc.index_map, grid, kernel=cfg.name, operand=acc.name
         )
         if len(matrix) != len(tile):
             raise ValueError(

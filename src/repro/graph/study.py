@@ -99,6 +99,7 @@ class StepTimeReport:
     durations: dict[str, float]
     unique: dict[str, object]  # fingerprint -> EstimateRecord
     meta: dict = field(default_factory=dict)
+    lint_reports: dict = field(default_factory=dict)  # node_id -> analysis.Report
 
     @property
     def step_time_s(self) -> float:
@@ -245,13 +246,17 @@ def step_time(
     fits=None,
     cache: EstimateCache | None = None,
     dag: KernelDAG | None = None,
+    lint: str | None = None,
 ) -> StepTimeReport:
     """Predict one whole-model step end-to-end: trace -> estimate -> replay.
 
     ``machine`` is a machine instance or registry name; the backend (and so
     the IR dialect the tracer emits) follows its family.  Pass ``dag=`` to
     re-price an already-traced DAG (the trace is machine-independent given a
-    backend).
+    backend).  ``lint="error"``/``"warn"`` statically audits every unique
+    node IR and raises :class:`repro.analysis.LintError` before estimation;
+    ``lint="annotate"`` collects the per-node reports into
+    ``report.lint_reports`` without gating.
     """
     from ..explore.study import resolve_machines
 
@@ -260,10 +265,19 @@ def step_time(
     if dag is None:
         dag = trace_step(model, batch=batch, seq=seq, mesh=mesh, backend=backend,
                          kind=kind)
+    if cache is None:
+        cache = EstimateCache()
+    lint_reports: dict = {}
+    if lint not in (None, "off"):
+        lint_reports = dag.lint(
+            mach, threshold=lint if lint in ("error", "warn") else None,
+            estimate_cache=cache,
+        )
     durations, unique = estimate_dag(
         dag, mach, method=method, fits=fits, cache=cache
     )
     replay = Replayer(dag, durations).run()
     return StepTimeReport(
-        dag=dag, machine=mach, replay=replay, durations=durations, unique=unique
+        dag=dag, machine=mach, replay=replay, durations=durations, unique=unique,
+        lint_reports=lint_reports,
     )

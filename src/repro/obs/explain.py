@@ -109,9 +109,12 @@ class ExplainReport:
     levels: list  # [LevelFlow]
     wave: dict  # wave/occupancy geometry (GPU) or grid/operand summary (TPU)
     prune: PruneVerdict
+    # static-analysis report (repro.analysis.Report) — attached only when the
+    # study ran with lint enabled, so lint-less explain output is unchanged
+    lint: object = None
 
     def to_json(self) -> dict:
-        return {
+        doc = {
             "kernel": self.kernel,
             "backend": self.backend,
             "machine": self.machine,
@@ -124,6 +127,9 @@ class ExplainReport:
             "wave": self.wave,
             "prune": self.prune.to_json(),
         }
+        if self.lint is not None:
+            doc["lint"] = self.lint.to_json()
+        return doc
 
     def render(self) -> str:
         """Human-readable report (what the CLI ``--explain`` prints)."""
@@ -169,6 +175,9 @@ class ExplainReport:
         v = self.prune
         verdict = f"would be pruned [{v.rule}]" if v.would_prune else "survives pruning"
         lines.append(f"  prune verdict: {verdict} — {v.detail}")
+        if self.lint is not None:
+            lines.append("")
+            lines.extend("  " + ln for ln in self.lint.render().splitlines())
         return "\n".join(lines)
 
 

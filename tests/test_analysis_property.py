@@ -1,0 +1,67 @@
+"""Hypothesis differential: analyzer verdicts vs brute-force enumeration on
+arbitrary small affine geometries (the adversarial twin of the seeded suite in
+``tests/test_analysis.py`` — shrinking finds minimal counterexamples)."""
+from __future__ import annotations
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency; pip install -r requirements-dev.txt")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis.passes import run_correctness_passes
+from repro.frontend.ir import AccessIR, IRAccess, IRField
+
+from test_analysis import _verdicts, brute_force  # noqa: E402 (tests dir is rootless)
+
+
+@st.composite
+def ir_strategy(draw):
+    ndim = draw(st.integers(1, 2))
+    iter_shape = tuple(
+        draw(st.integers(1, 6)) for _ in range(ndim)
+    )
+    nfields = draw(st.integers(1, 2))
+    fields = tuple(
+        IRField(name=f"f{k}", shape=(draw(st.integers(4, 40)),))
+        for k in range(nfields)
+    )
+    accesses = tuple(
+        IRAccess(
+            field=fields[draw(st.integers(0, nfields - 1))].name,
+            coeffs=(tuple(draw(st.integers(-3, 3)) for _ in range(ndim)),),
+            offset=(draw(st.integers(-4, 8)),),
+            is_store=draw(st.booleans()),
+        )
+        for _ in range(draw(st.integers(1, 3)))
+    )
+    return AccessIR(
+        name="hyp", fields=fields, accesses=accesses,
+        iter_shape=iter_shape, block=iter_shape,
+    )
+
+
+@settings(max_examples=150, deadline=None)
+@given(ir=ir_strategy())
+def test_enum_tier_matches_brute_force(ir):
+    truth = brute_force(ir)
+    got = _verdicts(run_correctness_passes(ir, mode="enum"))
+    assert got["oob"] == truth["oob"]
+    assert got["ww"] == truth["ww"]
+    assert got["rw"] == truth["rw"]
+    assert got["gap"] == truth["gap"]
+    assert got["alias"] == {a for a, _ in truth["alias"]}
+    assert not got["potential"]
+
+
+@settings(max_examples=150, deadline=None)
+@given(ir=ir_strategy())
+def test_structured_tier_is_sound(ir):
+    truth = brute_force(ir)
+    got = _verdicts(run_correctness_passes(ir, mode="structured"))
+    assert got["oob"] == truth["oob"]
+    assert got["ww"] == truth["ww"]
+    assert got["rw"] - truth["rw"] == set()
+    assert truth["rw"] - truth["ww"] <= got["rw"] | got["potential"]
+    assert got["gap"] == truth["gap"]
+    assert got["alias"] == {a for a, _ in truth["alias"]}

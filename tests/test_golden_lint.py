@@ -1,0 +1,71 @@
+"""Golden-file regression tests for the lint CLI.
+
+Two fixed points of the static analyzer, pinned as exact text output:
+
+* a **clean** registry kernel (canonical stencil25 config on V100) — its
+  report may carry warns/infos but zero errors, and the exact findings,
+  witnesses and suggestions must not drift;
+* a **seeded-bug fixture** (``racy_store``) — the write-write race must keep
+  firing with the same witness points.
+
+Regenerating after an INTENDED analyzer change::
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden_lint.py
+
+then inspect and commit the rewritten files under ``tests/golden/``.
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+import pytest
+
+from repro import analysis
+from repro.explore import cli
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+REGEN = os.environ.get("REPRO_REGEN_GOLDEN") == "1"
+
+CASES = {
+    "lint_stencil25.txt": (
+        0,
+        [
+            "lint", "--kernel", "stencil25",
+            "--config", '{"block": [32, 4, 8], "fold": [1, 1, 1]}',
+            "--machine", "V100",
+        ],
+    ),
+    "lint_fixture_racy_store.txt": (
+        1,
+        ["lint", "--fixture", "racy_store", "--machine", "V100"],
+    ),
+}
+
+
+@pytest.mark.parametrize("golden_name", sorted(CASES))
+def test_lint_cli_matches_golden(golden_name, capsys):
+    want_rc, args = CASES[golden_name]
+    analysis.clear_cache()
+    rc = cli.main(args)
+    out = capsys.readouterr().out
+    assert rc == want_rc
+    path = GOLDEN_DIR / golden_name
+    if REGEN:
+        path.write_text(out)
+        pytest.skip(f"regenerated {path}")
+    assert path.exists(), (
+        f"golden file {path} missing — generate it with "
+        "REPRO_REGEN_GOLDEN=1 (see module docstring)"
+    )
+    assert out == path.read_text(), (
+        f"lint output diverged from {golden_name}; if the change is intended, "
+        "regenerate with REPRO_REGEN_GOLDEN=1 and commit the diff"
+    )
+
+
+def test_golden_clean_and_seeded_disagree():
+    clean = (GOLDEN_DIR / "lint_stencil25.txt").read_text()
+    seeded = (GOLDEN_DIR / "lint_fixture_racy_store.txt").read_text()
+    assert "0 error(s)" in clean.splitlines()[0]
+    assert "race.write_write" in seeded and "witness" in seeded
